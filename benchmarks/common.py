@@ -1,0 +1,68 @@
+"""Shared benchmark harness: the paper's experimental setup (5 clients x 6
+tasks, 60/40 split), sized to run on CPU in minutes. Every table/figure
+script prints CSV rows ``name,us_per_call,derived`` plus its table."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.comm.accounting import fmt_bytes
+from repro.core import FedSTIL
+from repro.core.edge_model import EdgeModelConfig, extract_prototypes
+from repro.data import FederatedReIDBenchmark
+from repro.federated import FedAvg, FedCurv, FedProx, FedWeIT, run_simulation
+from repro.lifelong import EWC, ICaRL, MAS, STL
+
+N_CLIENTS = 5
+N_TASKS = 6
+ROUNDS = 12          # 2 rounds per task (paper: 60; scaled for CPU)
+EVAL_EVERY = 4
+EPOCHS = 4
+
+
+@functools.lru_cache(maxsize=4)
+def benchmark(seed: int = 0) -> FederatedReIDBenchmark:
+    return FederatedReIDBenchmark(
+        n_clients=N_CLIENTS, n_tasks=N_TASKS, n_identities=150,
+        ids_per_task=16, samples_per_id=8, seed=seed)
+
+
+def edge_cfg(bench) -> EdgeModelConfig:
+    return EdgeModelConfig(n_classes=bench.n_classes)
+
+
+def make_strategy(name: str, cfg, **kw):
+    table = {
+        "stl": lambda: STL(cfg, epochs=EPOCHS),
+        "ewc": lambda: EWC(cfg, epochs=EPOCHS),
+        "mas": lambda: MAS(cfg, epochs=EPOCHS),
+        "icarl": lambda: ICaRL(cfg, epochs=EPOCHS, extractor=extract_prototypes),
+        "fedavg": lambda: FedAvg(cfg, epochs=EPOCHS),
+        "fedprox": lambda: FedProx(cfg, epochs=EPOCHS),
+        "fedcurv": lambda: FedCurv(cfg, epochs=EPOCHS),
+        "fedweit_a": lambda: FedWeIT(cfg, epochs=EPOCHS, n_clients=N_CLIENTS,
+                                     l1=1e-4, l2=1e-6),
+        "fedweit_b": lambda: FedWeIT(cfg, epochs=EPOCHS, n_clients=N_CLIENTS,
+                                     l1=5e-6, l2=1e-3),
+        "fedstil": lambda: FedSTIL(cfg, epochs=EPOCHS, n_clients=N_CLIENTS, **kw),
+    }
+    if name not in table:
+        return FedSTIL(cfg, epochs=EPOCHS, n_clients=N_CLIENTS, **kw)
+    return table[name]()
+
+
+def run(name: str, *, rounds=ROUNDS, seed=0, verbose=False, **kw):
+    bench = benchmark(seed)
+    cfg = edge_cfg(bench)
+    strat = make_strategy(name, cfg, **kw)
+    t0 = time.time()
+    res = run_simulation(strat, bench, rounds=rounds, eval_every=EVAL_EVERY,
+                         seed=seed, verbose=verbose)
+    wall = time.time() - t0
+    return res, wall
+
+
+def csv_row(name: str, wall_s: float, derived: str):
+    print(f"{name},{wall_s * 1e6:.0f},{derived}", flush=True)

@@ -1,0 +1,24 @@
+"""Paper Fig. 6/7: accuracy and forgetting over communication rounds for the
+federated-lifelong methods."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run
+
+METHODS = ["fedavg", "fedcurv", "fedweit_b", "fedstil"]
+
+
+def main():
+    print("method,round,mAP,R1,forgetting_mAP")
+    out = {}
+    for m in METHODS:
+        res, wall = run(m)
+        out[m] = res.rounds
+        for r in res.rounds:
+            print(f"{m},{r['round']},{r['mAP']:.4f},{r['R1']:.4f},"
+                  f"{r['forgetting_mAP']:.4f}", flush=True)
+        csv_row(f"fig6/{m}", wall, f"final_mAP={res.final('mAP'):.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 8: accuracy vs cumulative communication cost."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run
+from repro.comm.accounting import fmt_bytes
+
+METHODS = ["fedavg", "fedprox", "fedcurv", "fedweit_a", "fedweit_b", "fedstil"]
+
+
+def main():
+    print("method,total_comm_bytes,total_comm,final_mAP")
+    out = {}
+    for m in METHODS:
+        res, wall = run(m)
+        out[m] = (res.comm.total, res.final("mAP"))
+        print(f"{m},{res.comm.total},{fmt_bytes(res.comm.total)},"
+              f"{res.final('mAP'):.4f}", flush=True)
+        csv_row(f"fig8/{m}", wall, f"bytes={res.comm.total}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: jnp-oracle wall time on CPU (the Pallas path is
+TPU-targeted; interpret mode is correctness-only) + analytic TPU roofline
+estimates per kernel (bytes moved / FLOPs / v5e bounds)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.sharding.analysis import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print("kernel,us_per_call,analytic_tpu_bound")
+
+    # flash attention (B,H,S,hd)
+    q = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    t = _time(lambda a: ops.flash_attention(a, q, q), q)
+    flops = 4 * 1 * 4 * 512 * 512 * 64
+    print(f"flash_attention_512,{t*1e6:.0f},"
+          f"tpu_compute_bound={flops/PEAK_FLOPS_BF16*1e6:.2f}us", flush=True)
+
+    # pairwise dist (2k x 4k gallery, D=128)
+    qf = jax.random.normal(key, (2048, 128))
+    gf = jax.random.normal(key, (4096, 128))
+    t = _time(lambda a, b: ops.pairwise_dist(a, b), qf, gf)
+    flops = 2 * 2048 * 4096 * 128
+    print(f"pairwise_dist_2kx4k,{t*1e6:.0f},"
+          f"tpu_compute_bound={flops/PEAK_FLOPS_BF16*1e6:.2f}us", flush=True)
+
+    # adaptive combine (1M params)
+    b = jax.random.normal(key, (1_000_000,))
+    t = _time(lambda x: ops.adaptive_combine(x, x, x), b)
+    bytes_ = 4 * 4 * 1_000_000
+    print(f"adaptive_combine_1M,{t*1e6:.0f},"
+          f"tpu_mem_bound={bytes_/HBM_BW*1e6:.2f}us", flush=True)
+
+    # relevance aggregate (5 clients x 1M params)
+    th = jax.random.normal(key, (5, 1_000_000))
+    w = jax.nn.softmax(jax.random.normal(key, (5, 5)))
+    t = _time(lambda a, x: ops.relevance_aggregate(a, x), w, th)
+    bytes_ = 4 * 2 * 5 * 1_000_000
+    print(f"relevance_aggregate_5x1M,{t*1e6:.0f},"
+          f"tpu_mem_bound={bytes_/HBM_BW*1e6:.2f}us", flush=True)
+
+    # kl similarity (history 30 x 30, D=128)
+    a = jax.random.normal(key, (30, 128))
+    t = _time(lambda x: ops.kl_similarity(x, x), a)
+    print(f"kl_similarity_30x30,{t*1e6:.0f},negligible", flush=True)
+
+
+if __name__ == "__main__":
+    main()

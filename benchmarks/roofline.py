@@ -1,0 +1,56 @@
+"""Roofline report: reads results/dryrun/*.json (written by
+repro.launch.dryrun) and prints the §Roofline table — three terms per
+(arch x shape) on the single-pod mesh, dominant bottleneck, MODEL_FLOPS
+ratio. Also emits the EXPERIMENTS.md-ready markdown with --md."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ROW = ("{arch},{shape},{t_comp:.6f},{t_mem:.6f},{t_coll:.6f},{bottleneck},"
+       "{useful:.4f}")
+
+
+def load(out_dir: str, mesh: str = "sp"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+
+    recs = [r for r in load(args.out) if r.get("ok")]
+    fails = [r for r in load(args.out) if not r.get("ok")]
+    if args.md:
+        print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+              "| bottleneck | useful FLOPs ratio |")
+        print("|---|---|---|---|---|---|---|")
+        for r in recs:
+            rf = r["roofline"]
+            print(f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.4g} "
+                  f"| {rf['t_memory_s']:.4g} | {rf['t_collective_s']:.4g} "
+                  f"| **{rf['bottleneck']}** | {rf['useful_flops_ratio']:.3f} |")
+    else:
+        print("arch,shape,t_compute_s,t_memory_s,t_collective_s,bottleneck,"
+              "useful_flops_ratio")
+        for r in recs:
+            rf = r["roofline"]
+            print(ROW.format(arch=r["arch"], shape=r["shape"],
+                             t_comp=rf["t_compute_s"], t_mem=rf["t_memory_s"],
+                             t_coll=rf["t_collective_s"],
+                             bottleneck=rf["bottleneck"],
+                             useful=rf["useful_flops_ratio"]))
+    if fails:
+        print(f"# FAILURES: {[(r['arch'], r['shape']) for r in fails]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+``python -m benchmarks.run [--only tableN]`` prints each table plus
+``name,us_per_call,derived`` CSV rows.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table2|table3|table4|table5|table6|fig6|fig8|kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_rounds, fig8_comm, kernels_bench,
+                            table2_methods, table3_ablation, table4_memory,
+                            table5_backbones, table6_distance)
+    suites = {
+        "table2": table2_methods.main,
+        "table3": table3_ablation.main,
+        "table4": table4_memory.main,
+        "table5": table5_backbones.main,
+        "table6": table6_distance.main,
+        "fig6": fig6_rounds.main,
+        "fig8": fig8_comm.main,
+        "kernels": kernels_bench.main,
+    }
+    names = [args.only] if args.only else list(suites)
+    t0 = time.time()
+    for name in names:
+        print(f"\n===== {name} =====", flush=True)
+        suites[name]()
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

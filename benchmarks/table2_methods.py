@@ -1,0 +1,32 @@
+"""Paper Table II: methods x (mAP, R1, R3, R5, storage, S2C, C2S).
+
+Validates the paper's ordering claims on the synthetic mixture:
+federated-lifelong (FedSTIL) > federated > lifelong/local on accuracy,
+with FedSTIL's comm cost ~= FedAvg's and << FedCurv/FedWeIT's.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run
+from repro.comm.accounting import fmt_bytes
+
+METHODS = ["stl", "ewc", "mas", "icarl", "fedavg", "fedprox",
+           "fedcurv", "fedweit_a", "fedweit_b", "fedstil"]
+
+
+def main(methods=METHODS, rounds=None):
+    print("method,mAP,R1,R3,R5,storage,S2C,C2S")
+    results = {}
+    for m in methods:
+        kw = {"rounds": rounds} if rounds else {}
+        res, wall = run(m, **kw)
+        f = res.final_metrics()
+        results[m] = res
+        print(f"{m},{f['mAP']:.4f},{f['R1']:.4f},{f['R3']:.4f},{f['R5']:.4f},"
+              f"{fmt_bytes(res.storage_bytes)},{fmt_bytes(res.comm.total_s2c)},"
+              f"{fmt_bytes(res.comm.total_c2s)}", flush=True)
+        csv_row(f"table2/{m}", wall, f"mAP={f['mAP']:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Table III: ablation of ST-integration / prototype rehearsal /
+parameter tying."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run
+
+VARIANTS = {
+    "fedstil": {},
+    "wo_st_integration": {"st_integration": False},
+    "wo_prototype_rehearsal": {"rehearsal": False},
+    "wo_parameter_tying": {"tying": False},
+}
+
+
+def main():
+    print("variant,mAP,R1")
+    out = {}
+    for name, kw in VARIANTS.items():
+        res, wall = run("fedstil", **kw)
+        f = res.final_metrics()
+        out[name] = f
+        print(f"{name},{f['mAP']:.4f},{f['R1']:.4f}", flush=True)
+        csv_row(f"table3/{name}", wall, f"mAP={f['mAP']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

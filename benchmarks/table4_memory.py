@@ -1,0 +1,29 @@
+"""Paper Table IV: forgetting vs rehearsal memory size (mAP-F, R1-F, R5-F
+decrease as the prototype memory grows)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run
+from repro.comm.accounting import fmt_bytes
+
+SIZES = [0, 250, 500, 1000, 2000]
+
+
+def main():
+    print("memory_size,storage,mAP_F,R1_F,R5_F")
+    out = {}
+    for size in SIZES:
+        kw = ({"rehearsal": False} if size == 0
+              else {"memory_size": size})
+        res, wall = run("fedstil", **kw)
+        f = res.final_metrics()
+        out[size] = f
+        print(f"{size},{fmt_bytes(res.storage_bytes)},"
+              f"{f['forgetting_mAP']:.4f},{f['forgetting_R1']:.4f},"
+              f"{f.get('forgetting_R5', 0.0):.4f}", flush=True)
+        csv_row(f"table4/mem{size}", wall,
+                f"R1_F={f['forgetting_R1']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

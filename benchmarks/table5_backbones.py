@@ -1,0 +1,47 @@
+"""Paper Table V: different backbones (ResNet18/ResNet50/Swin-T there; here
+the backbone-agnosticism is exercised with three extraction/adaptive widths
+standing in for small/medium/large backbones, plus the assigned-architecture
+smoke path at transformer scale)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import EPOCHS, N_CLIENTS, ROUNDS, benchmark, csv_row
+from repro.comm.accounting import fmt_bytes
+from repro.core import FedSTIL
+from repro.core.edge_model import EdgeModelConfig
+from repro.federated import FedAvg, run_simulation
+from repro.lifelong import EWC
+
+BACKBONES = {
+    "small(resnet18-like)": dict(proto_dim=64, hidden=64, feat_dim=32),
+    "medium(resnet50-like)": dict(proto_dim=128, hidden=128, feat_dim=64),
+    "large(swin-t-like)": dict(proto_dim=256, hidden=256, feat_dim=128),
+}
+
+
+def main():
+    print("backbone,method,mAP,R1,storage,total_comm")
+    bench = benchmark(0)
+    out = {}
+    for bk_name, dims in BACKBONES.items():
+        cfg = EdgeModelConfig(n_classes=bench.n_classes, **dims)
+        for method, ctor in [
+            ("fedavg", lambda: FedAvg(cfg, epochs=EPOCHS)),
+            ("fedstil", lambda: FedSTIL(cfg, epochs=EPOCHS,
+                                        n_clients=N_CLIENTS)),
+        ]:
+            t0 = time.time()
+            res = run_simulation(ctor(), bench, rounds=ROUNDS, eval_every=4)
+            f = res.final_metrics()
+            out[(bk_name, method)] = f
+            print(f"{bk_name},{method},{f['mAP']:.4f},{f['R1']:.4f},"
+                  f"{fmt_bytes(res.storage_bytes)},{fmt_bytes(res.comm.total)}",
+                  flush=True)
+            csv_row(f"table5/{bk_name}/{method}", time.time() - t0,
+                    f"mAP={f['mAP']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table VI: task-similarity distance metric (KL vs Cosine vs
+Euclidean) for the spatial-temporal integration."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run
+
+METRICS = ["cosine", "euclidean", "kl"]
+
+
+def main():
+    print("distance,mAP,R1,R3,R5")
+    out = {}
+    for metric in METRICS:
+        res, wall = run("fedstil", metric=metric)
+        f = res.final_metrics()
+        out[metric] = f
+        print(f"{metric},{f['mAP']:.4f},{f['R1']:.4f},{f['R3']:.4f},"
+              f"{f['R5']:.4f}", flush=True)
+        csv_row(f"table6/{metric}", wall, f"mAP={f['mAP']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Example 4: serving — batched greedy decoding through the KV-cache /
+SSM-state path for three different architecture families, including the
+sliding-window ring cache (the long_500k mechanism) and an SSM whose state
+is O(1) in context length.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+for argv in (
+    ["--arch", "qwen1.5-0.5b", "--batch", "2", "--prompt-len", "8", "--gen", "24"],
+    ["--arch", "qwen1.5-0.5b", "--batch", "2", "--prompt-len", "8", "--gen", "24",
+     "--window", "16"],                       # ring cache (long-context mode)
+    ["--arch", "rwkv6-1.6b", "--batch", "2", "--prompt-len", "8", "--gen", "24"],
+    ["--arch", "zamba2-2.7b", "--batch", "2", "--prompt-len", "8", "--gen", "24"],
+):
+    print("\n$ python -m repro.launch.serve", " ".join(argv), flush=True)
+    subprocess.run([sys.executable, "-m", "repro.launch.serve"] + argv,
+                   check=True)

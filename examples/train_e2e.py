@@ -1,0 +1,76 @@
+"""Example 3: end-to-end training driver — a ~100M-parameter qwen-family
+model (FULL qwen1.5-0.5b trunk reduced to ~100M by layer count) trained for
+a few hundred steps on structured synthetic tokens with the FedSTIL split
+(frozen extraction trunk, adaptive last block + head, theta = B⊙alpha+A).
+
+Loss must drop substantially; prints a CSV learning curve and saves a
+checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data.tokens import synthetic_lm_batch
+from repro.train import init_train_state, make_train_step
+from repro.train.optimizer import adam, cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M params: qwen1.5-0.5b arch, 8 layers, d=768, vocab 32k
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-0.5b"),
+        name="qwen-100m", n_layers=8, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=2048, vocab_size=32000, head_dim=0,
+        param_dtype="float32", compute_dtype="float32", fsdp=False,
+        n_adaptive_layers=2)
+    n_params = cfg.n_params()
+    print(f"model: {cfg.name}  ~{n_params/1e6:.0f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model})")
+
+    opt = adam(lr=1e-3, weight_decay=1e-5,
+               schedule=cosine_schedule(warmup=20, total=args.steps))
+    st = init_train_state(cfg, jax.random.PRNGKey(0), optimizer=opt)
+    step = jax.jit(make_train_step(cfg, optimizer=opt, tie_lambda=1e-4))
+
+    rng = np.random.default_rng(0)
+    trainable, opt_state = st.trainable, st.opt_state
+    t0 = time.time()
+    print("step,loss,tokens_per_s")
+    first = last = None
+    for i in range(args.steps):
+        toks, labels = synthetic_lm_batch(rng, args.batch, args.seq, cfg.vocab_size)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        trainable, opt_state, m = step(st.frozen, st.B, trainable, opt_state,
+                                       batch)
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if i % 20 == 0 or i == args.steps - 1:
+            tps = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"{i},{loss:.4f},{tps:.0f}", flush=True)
+
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'OK: decreased' if last < first - 0.5 else 'WARN'})")
+    save_checkpoint("results/e2e_qwen100m.npz",
+                    {"trainable": trainable},
+                    metadata={"arch": cfg.name, "steps": args.steps,
+                              "final_loss": last})
+    print("checkpoint -> results/e2e_qwen100m.npz")
+
+
+if __name__ == "__main__":
+    main()

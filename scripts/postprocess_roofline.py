@@ -1,0 +1,85 @@
+"""Augment results/dryrun/*.json with the analytic (trip-count-correct)
+roofline terms + final bottleneck/table fields. Produces
+results/roofline_table.json + markdown for EXPERIMENTS.md §Roofline."""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.sharding.analysis import (HBM_BW, ICI_BW, ICI_LINKS,
+                                     PEAK_FLOPS_BF16, analytic_model_flops)
+from repro.sharding.analytic import analytic_roofline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.out, "*__sp.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "ok": False, "error": rec.get("error", "")[:120]})
+            continue
+        cfg = get_config(rec["arch"])
+        shape = INPUT_SHAPES[rec["shape"]]
+        an = analytic_roofline(cfg, shape, tp=16, dp=16, pods=1)
+        t_comp = an["flops_per_device"] / PEAK_FLOPS_BF16
+        t_mem = an["hbm_bytes_per_device"] / HBM_BW
+        t_coll = an["collective_bytes_per_device"] / (ICI_BW * ICI_LINKS)
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        bottleneck = max(terms, key=terms.get)
+        model_flops = analytic_model_flops(cfg, shape)
+        useful = model_flops / max(an["flops_per_device"] * 256, 1)
+        hlo = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "ok": True,
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "bottleneck": bottleneck,
+            "model_flops": model_flops,
+            "useful_flops_ratio": min(useful, 1.0),
+            "params_bytes_per_device": an["params_bytes_per_device"],
+            "hlo_flops_scanbody": hlo["flops_per_device"],
+            "hlo_coll_bytes_scanbody": hlo["collective_bytes_per_device"],
+            "temp_bytes": rec["memory"].get("temp_size_in_bytes"),
+            "args_bytes": rec["memory"].get("args_bytes_per_device"),
+            "compile_s": rec["compile_s"],
+        })
+
+    with open("results/roofline_table.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+    if args.md:
+        print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+              "bottleneck | useful | args GB/dev |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if not r["ok"]:
+                print(f"| {r['arch']} | {r['shape']} | FAILED: {r['error']} "
+                      "| | | | | |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4g} | "
+                  f"{r['t_memory_s']:.4g} | {r['t_collective_s']:.4g} | "
+                  f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+                  f"{(r['args_bytes'] or 0)/1e9:.2f} |")
+    else:
+        print(f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+              f"{'t_coll':>9s} {'bottleneck':>11s} {'useful':>7s}")
+        for r in rows:
+            if not r["ok"]:
+                print(f"{r['arch']:24s} {r['shape']:12s} FAILED")
+                continue
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+                  f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+                  f"{r['bottleneck']:>11s} {r['useful_flops_ratio']:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

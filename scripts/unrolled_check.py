@@ -1,0 +1,28 @@
+"""Validate the analytic roofline model against an UNROLLED lowering:
+qwen1.5-0.5b train_4k with the 23-layer trunk scan fully unrolled, so XLA's
+HLO contains every layer's collectives and flops explicitly."""
+import os
+os.environ["REPRO_SCAN_UNROLL"] = "23"
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+import json
+
+from repro.launch.dryrun import run_combo
+from repro.configs import get_config, INPUT_SHAPES
+from repro.sharding.analytic import analytic_roofline
+
+rec = run_combo("qwen1.5-0.5b", "train_4k", multi_pod=False)
+an = analytic_roofline(get_config("qwen1.5-0.5b"), INPUT_SHAPES["train_4k"])
+out = {
+    "hlo_unrolled_flops": rec["cost"].get("flops"),
+    "hlo_unrolled_coll_bytes": rec["collectives"]["total_bytes"],
+    "analytic_flops": an["flops_per_device"],
+    "analytic_coll_bytes": an["collective_bytes_per_device"],
+    "flops_ratio": rec["cost"].get("flops", 0) / max(an["flops_per_device"], 1),
+    "coll_ratio": rec["collectives"]["total_bytes"]
+                  / max(an["collective_bytes_per_device"], 1),
+}
+print(json.dumps(out, indent=1))
+with open("results/unrolled_check.json", "w") as f:
+    json.dump(out, f, indent=1)

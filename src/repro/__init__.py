@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of FedSTIL (spatial-temporal
+federated lifelong learning for person ReID) with a multi-architecture
+model zoo, multi-pod sharding, and Pallas TPU kernels."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,65 @@
+"""Pytree checkpointing (npz-based, no external deps).
+
+Flat key paths ("layers/attn/wq") -> arrays; metadata via a JSON sidecar
+entry. Used by the trainer, the federated driver, and the examples.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+
+    def fix_lists(node):
+        if isinstance(node, dict):
+            keys = list(node)
+            if keys and all(k.isdigit() for k in keys):
+                return [fix_lists(node[str(i)]) for i in range(len(keys))]
+            return {k: fix_lists(v) for k, v in node.items()}
+        return node
+    return fix_lists(root)
+
+
+def save_checkpoint(path: str, tree, metadata: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if metadata is not None:
+        flat["__meta__"] = np.frombuffer(
+            json.dumps(metadata).encode(), dtype=np.uint8)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, Optional[dict]]:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = dict(np.load(path))
+    meta = None
+    if "__meta__" in data:
+        meta = json.loads(bytes(data.pop("__meta__").tobytes()).decode())
+    return _unflatten(data), meta

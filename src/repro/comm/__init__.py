@@ -1,0 +1,1 @@
+from repro.comm.accounting import CommLog, fmt_bytes

@@ -1,0 +1,44 @@
+"""Communication-cost accounting (paper Table II: S2C / C2S columns).
+
+Every strategy reports the exact payload pytrees it moves; we count bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict
+
+from repro.common.pytree import tree_bytes
+
+
+@dataclasses.dataclass
+class CommLog:
+    def __post_init__(self):
+        self.c2s: Dict[int, int] = defaultdict(int)   # per round
+        self.s2c: Dict[int, int] = defaultdict(int)
+
+    def log_c2s(self, rnd: int, payload):
+        self.c2s[rnd] += tree_bytes(payload) if not isinstance(payload, int) else payload
+
+    def log_s2c(self, rnd: int, payload):
+        self.s2c[rnd] += tree_bytes(payload) if not isinstance(payload, int) else payload
+
+    @property
+    def total_c2s(self) -> int:
+        return sum(self.c2s.values())
+
+    @property
+    def total_s2c(self) -> int:
+        return sum(self.s2c.values())
+
+    @property
+    def total(self) -> int:
+        return self.total_c2s + self.total_s2c
+
+
+def fmt_bytes(n: int) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"

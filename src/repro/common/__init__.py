@@ -1,0 +1,11 @@
+from repro.common.axes import AxisCtx, UNSHARDED
+from repro.common.pytree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_bytes,
+    tree_flatten_concat,
+    tree_unflatten_concat,
+    tree_zeros_like,
+    tree_size,
+)

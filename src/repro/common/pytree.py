@@ -1,0 +1,51 @@
+"""Small pytree helpers used across the framework (optimizers, federated
+aggregation, comm accounting)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    """Total number of elements in a pytree."""
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(a)))
+
+
+def tree_bytes(a) -> int:
+    """Total number of bytes in a pytree (for communication accounting)."""
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(a)))
+
+
+def tree_flatten_concat(a):
+    """Flatten a pytree of arrays into one 1-D vector + treedef/shapes."""
+    leaves, treedef = jax.tree.flatten(a)
+    shapes = [l.shape for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l) for l in leaves]) if leaves else jnp.zeros((0,))
+    return flat, (treedef, shapes)
+
+
+def tree_unflatten_concat(flat, meta):
+    treedef, shapes = meta
+    leaves, off = [], 0
+    for s in shapes:
+        n = int(np.prod(s)) if len(s) else 1
+        leaves.append(jnp.reshape(flat[off:off + n], s))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,18 @@
+"""deepseek-7b [dense] — llama-arch, MHA (kv=32). [arXiv:2401.02954]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b",
+    family="dense",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab_size=102400,
+    norm="rmsnorm",
+    act="swiglu",
+    rope_theta=10000.0,
+    n_adaptive_layers=1,
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,21 @@
+"""internvl2-26b [vlm] — InternViT vision encoder is a stub (precomputed patch
+embeddings); this is the InternLM2 language backbone. [arXiv:2404.16821]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    norm="rmsnorm",
+    act="swiglu",
+    rope_theta=1e6,
+    n_vision_tokens=256,       # projector output tokens (stub frontend)
+    n_adaptive_layers=1,
+    fsdp=True,
+    source="arXiv:2404.16821",
+)

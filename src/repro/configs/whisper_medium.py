@@ -1,0 +1,21 @@
+"""whisper-medium [audio] — enc-dec transformer backbone; conv/mel frontend is
+a stub per assignment. [arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    n_layers=24,               # decoder layers
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    norm="layernorm",
+    act="gelu",
+    rope_theta=0.0,            # whisper uses learned/sinusoidal positions
+    enc_seq=1500,              # stub frame embeddings (30s audio @ 50Hz)
+    n_adaptive_layers=1,
+    source="arXiv:2212.04356",
+)

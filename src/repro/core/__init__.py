@@ -1,0 +1,24 @@
+"""The paper's primary contribution: FedSTIL — spatial-temporal federated
+lifelong learning. Adaptive parameterization (Eq. 2), prototype pipeline
+(Eq. 1/3), KL task similarity (Eq. 4), knowledge relevance (Eq. 5),
+personalized aggregation (Eq. 6), prototype rehearsal, parameter tying."""
+
+from repro.core.adaptive import (
+    AdaptiveState,
+    combine,
+    init_adaptive,
+    merge_params,
+    split_params,
+)
+from repro.core.aggregation import fedavg_aggregate, personalized_aggregate
+from repro.core.fedstil import FedSTIL
+from repro.core.rehearsal import PrototypeMemory
+from repro.core.relevance import RelevanceTracker
+from repro.core.similarity import (
+    SIMILARITY_FNS,
+    cosine_similarity,
+    euclidean_similarity,
+    kl_similarity,
+    pairwise_similarity,
+)
+from repro.core.tying import tying_loss

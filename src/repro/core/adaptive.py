@@ -1,0 +1,81 @@
+"""FedSTIL adaptive-layer parameterization (paper Eq. 2):
+
+    theta_c = B_c ⊙ alpha_c + A_c
+
+``B_c`` carries global spatial-temporal knowledge (dispatched by the server),
+``alpha_c`` is a learnable attention that selects the task-specific slice of
+it, and ``A_c`` is the locally-learnt residual. Locally trainable parameters
+are (alpha_c, A_c); B_c is set by the server each round.
+
+This module is model-agnostic: it operates on any pytree of adaptive-layer
+parameters (the MLP edge model in the paper benchmarks, or the last
+transformer block + head of any assigned architecture).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class AdaptiveState:
+    """Per-client decomposed adaptive parameters."""
+
+    B: Any          # base (server-provided spatial-temporal knowledge)
+    alpha: Any      # attention over B (same structure)
+    A: Any          # local residual (same structure)
+
+    def theta(self):
+        return combine(self.B, self.alpha, self.A)
+
+    def trainable(self):
+        return {"alpha": self.alpha, "A": self.A}
+
+    def with_trainable(self, t):
+        return AdaptiveState(B=self.B, alpha=t["alpha"], A=t["A"])
+
+    def with_base(self, B):
+        return AdaptiveState(B=B, alpha=self.alpha, A=self.A)
+
+
+def combine(B, alpha, A):
+    """theta = B ⊙ alpha + A, leaf-wise (paper Eq. 2).
+
+    The TPU hot-path version of this is kernels/adaptive_combine.py; this is
+    the pure-jnp form used in HLO lowering and on CPU.
+    """
+    return jax.tree.map(lambda b, al, a: b * al + a, B, alpha, A)
+
+
+def init_adaptive(theta0) -> AdaptiveState:
+    """Start with theta == theta0 (pretrained): B=theta0, alpha=1, A=0."""
+    return AdaptiveState(
+        B=theta0,
+        alpha=jax.tree.map(jnp.ones_like, theta0),
+        A=jax.tree.map(jnp.zeros_like, theta0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# model-level split: which sub-pytree of a full model is "adaptive"
+# ---------------------------------------------------------------------------
+
+_ADAPTIVE_KEYS = ("adaptive_layers", "shared_attn", "head", "final_norm")
+
+
+def split_params(cfg: ModelConfig, params):
+    """(frozen extraction layers, adaptive layers) per DESIGN.md §3."""
+    adaptive = {k: params[k] for k in _ADAPTIVE_KEYS if k in params}
+    frozen = {k: v for k, v in params.items() if k not in adaptive}
+    return frozen, adaptive
+
+
+def merge_params(frozen, adaptive):
+    out = dict(frozen)
+    out.update(adaptive)
+    return out

@@ -1,0 +1,55 @@
+"""Personalized model aggregation on the parameter server (paper Eq. 6):
+
+    B_i = sum_{j in C\\i} W_ij^(t) * theta_j
+
+On the TPU mesh this is a client-axis weighted matmul over the flattened
+adaptive pytrees — see kernels/relevance_aggregate.py for the Pallas
+version; this module is the reference implementation that also runs the
+edge-scale benchmarks on CPU.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def stack_thetas(thetas: Sequence):
+    """List of C identical pytrees -> single pytree with leading C dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *thetas)
+
+
+def unstack(tree, n: int):
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def personalized_aggregate(thetas: Sequence, W) -> List:
+    """B_i = sum_j W[i, j] * theta_j for every client i.
+
+    thetas: length-C list of adaptive pytrees; W: (C, C) with zero diagonal.
+    Returns a length-C list of base pytrees B_i.
+    """
+    W = jnp.asarray(W, jnp.float32)
+    stacked = stack_thetas(thetas)                     # leaves (C, ...)
+    agg = jax.tree.map(
+        lambda x: jnp.einsum(
+            "ij,j...->i...", W, x.astype(jnp.float32)).astype(x.dtype),
+        stacked)
+    return unstack(agg, W.shape[0])
+
+
+def fedavg_aggregate(thetas: Sequence, weights=None):
+    """Uniform (or sample-count-weighted) FedAvg mean."""
+    C = len(thetas)
+    if weights is None:
+        w = np.full((C,), 1.0 / C, np.float32)
+    else:
+        w = np.asarray(weights, np.float32)
+        w = w / w.sum()
+    stacked = stack_thetas(thetas)
+    return jax.tree.map(
+        lambda x: jnp.einsum(
+            "j,j...->...", jnp.asarray(w), x.astype(jnp.float32)).astype(x.dtype),
+        stacked)

@@ -1,0 +1,84 @@
+"""Edge-scale ReID model: frozen extraction layers + adaptive layers.
+
+This is the paper's deployment model at benchmark scale: the backbone trunk
+("extraction layers" G_c, initialized from pre-trained weights and frozen)
+encodes raw images into compact prototypes (Eq. 1); the "adaptive layers"
+(last block + classifier in the paper; an MLP block + bias-free classifier
+here, matching the paper's modified-ResNet head: BN after the representation,
+no classifier bias) are what FedSTIL decomposes as theta = B ⊙ alpha + A.
+
+For the assigned large architectures the same split is realised as
+(transformer trunk | last block + head) — see repro/core/adaptive.split_params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.axes import UNSHARDED
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeModelConfig:
+    img_dim: int = 256         # stub "image" dimensionality (synthetic data)
+    proto_dim: int = 128       # prototype size (extraction-layer output)
+    hidden: int = 128          # adaptive-layer hidden
+    feat_dim: int = 64         # retrieval feature size
+    n_classes: int = 512       # global identity space
+
+
+def init_extraction(key, cfg: EdgeModelConfig):
+    """Frozen G_c: simulates the pre-trained ResNet trunk."""
+    k1, k2 = jax.random.split(key)
+    s1 = 1.0 / jnp.sqrt(cfg.img_dim)
+    s2 = 1.0 / jnp.sqrt(cfg.proto_dim)
+    return {
+        "w1": jax.random.normal(k1, (cfg.img_dim, cfg.proto_dim)) * s1,
+        "w2": jax.random.normal(k2, (cfg.proto_dim, cfg.proto_dim)) * s2,
+    }
+
+
+def extract_prototypes(g_params, images):
+    """Eq. (1): P = G(X). images: (N, img_dim) -> (N, proto_dim)."""
+    h = jnp.tanh(images @ g_params["w1"])
+    return jnp.tanh(h @ g_params["w2"])
+
+
+def init_adaptive_layers(key, cfg: EdgeModelConfig):
+    """Trainable F_c (decomposed by FedSTIL into B ⊙ alpha + A)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = 1.0 / jnp.sqrt(cfg.proto_dim)
+    s2 = 1.0 / jnp.sqrt(cfg.hidden)
+    return {
+        "l1": {"w": jax.random.normal(k1, (cfg.proto_dim, cfg.hidden)) * s1,
+               "b": jnp.zeros((cfg.hidden,))},
+        "l2": {"w": jax.random.normal(k2, (cfg.hidden, cfg.feat_dim)) * s2,
+               "b": jnp.zeros((cfg.feat_dim,))},
+        "bn": {"scale": jnp.ones((cfg.feat_dim,)),
+               "bias": jnp.zeros((cfg.feat_dim,))},
+        # bias-free classifier (paper: "bias of the classifier is removed")
+        "head": {"w": jax.random.normal(k3, (cfg.feat_dim, cfg.n_classes))
+                 * (1.0 / jnp.sqrt(cfg.feat_dim))},
+    }
+
+
+def adaptive_forward(theta, protos):
+    """prototypes -> (retrieval features, class logits)."""
+    h = jax.nn.relu(protos @ theta["l1"]["w"] + theta["l1"]["b"])
+    f = h @ theta["l2"]["w"] + theta["l2"]["b"]
+    # batch-norm-like standardisation (paper adds BN after representation)
+    mu = jnp.mean(f, 0, keepdims=True)
+    sd = jnp.std(f, 0, keepdims=True) + 1e-5
+    fn = (f - mu) / sd * theta["bn"]["scale"] + theta["bn"]["bias"]
+    logits = fn @ theta["head"]["w"]
+    return fn, logits
+
+
+def ce_loss(theta, protos, labels):
+    feats, logits = adaptive_forward(theta, protos)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+    return jnp.mean(nll)

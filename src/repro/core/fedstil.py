@@ -1,0 +1,124 @@
+"""FedSTIL — the paper's method (Algorithm 1), as a Strategy.
+
+Per round t, per client c:
+  1. prototypes P_c^t = G_c(D_c^t) arrive (extraction layers frozen);
+  2. server receives only the task feature (mean prototype, Eq. 3);
+  3. server computes KL task similarity (Eq. 4), decayed knowledge
+     relevance W (Eq. 5), and the personalized base B_c = Σ W_cj θ_j (Eq. 6);
+  4. client sets θ_c = B_c ⊙ α_c + A_c (Eq. 2) and trains (α_c, A_c) on a
+     mix of current prototypes and rehearsal samples, with parameter tying;
+  5. client stores nearest-mean exemplar prototypes; uploads θ_c.
+
+Ablation switches (Table III): ``st_integration``, ``rehearsal``, ``tying``.
+Distance metric switch (Table VI): ``metric`` ∈ {kl, cosine, euclidean}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_bytes
+from repro.core import edge_model as EM
+from repro.core.adaptive import AdaptiveState, combine, init_adaptive
+from repro.core.aggregation import personalized_aggregate
+from repro.core.rehearsal import PrototypeMemory
+from repro.core.relevance import RelevanceTracker
+from repro.core.tying import tying_loss
+from repro.federated.base import ClientState, Strategy
+
+
+class FedSTIL(Strategy):
+    name = "fedstil"
+    uses_server = True
+
+    def __init__(self, cfg, *, n_clients=5, metric="kl", forgetting_ratio=0.5,
+                 history_len=6, memory_size=2000, per_identity=8,
+                 lam_tie=1e-4, st_integration=True, rehearsal=True,
+                 tying=True, **kw):
+        super().__init__(cfg, **kw)
+        self.n_clients = n_clients
+        self.lam_tie = lam_tie
+        self.st_integration = st_integration
+        self.use_rehearsal = rehearsal
+        self.use_tying = tying
+        self.memory_size = memory_size
+        self.per_identity = per_identity
+        self.tracker = RelevanceTracker(
+            n_clients, history_len=history_len,
+            forgetting_ratio=forgetting_ratio, metric=metric)
+        self.last_W: Optional[np.ndarray] = None
+
+    # ---- decomposition -------------------------------------------------------
+    def init_client(self, key):
+        theta0 = EM.init_adaptive_layers(key, self.cfg)
+        ad = init_adaptive(theta0)
+        st = ClientState(theta=ad.trainable())
+        st.extras["reg_B"] = ad.B
+        st.extras["reg_prev_theta"] = theta0
+        st.extras["memory"] = PrototypeMemory(
+            capacity=self.memory_size, per_identity=self.per_identity)
+        return st
+
+    def make_theta(self, trainable, extras):
+        return combine(extras["reg_B"], trainable["alpha"], trainable["A"])
+
+    def regularizer(self, trainable, extras):
+        if not self.use_tying:
+            return 0.0
+        theta = self.make_theta(trainable, extras)
+        return tying_loss(theta, extras["reg_prev_theta"], lam_l1=self.lam_tie)
+
+    def _eval_theta(self, state):
+        return self.make_theta(state.theta, state.extras)
+
+    # ---- local round ---------------------------------------------------------
+    def local_train(self, client, state, protos, labels, rnd, **_):
+        rehearsal = None
+        mem: PrototypeMemory = state.extras["memory"]
+        if self.use_rehearsal and len(mem):
+            rehearsal = mem.sample(self.rng, self.batch)
+        state, _ = self._run_epochs(state, protos, labels, rehearsal)
+
+        theta = self._eval_theta(state)
+        state.extras["reg_prev_theta"] = theta
+
+        # store exemplar prototypes (nearest-mean, Fig. 4)
+        if self.use_rehearsal:
+            outputs, _ = EM.adaptive_forward(theta, jnp.asarray(protos))
+            mem.add_task(protos, labels, np.asarray(outputs), task_id=rnd)
+
+        # upload: adaptive-layer params + the tiny task feature (Eq. 3)
+        task_feature = np.asarray(protos, np.float32).mean(0)
+        return state, {"theta": theta, "task_feature": task_feature}
+
+    # ---- server round (spatial-temporal integration) -------------------------
+    def server_round(self, rnd, uploads):
+        if not self.st_integration:
+            return {}
+        clients = sorted(uploads)
+        for c in clients:
+            self.tracker.push(c, uploads[c]["task_feature"])
+        W = self.tracker.relevance()
+        self.last_W = W
+        thetas = [uploads[c]["theta"] for c in clients]
+        bases = personalized_aggregate(thetas, W)
+        out = {}
+        for i, c in enumerate(clients):
+            if W[i].sum() > 0:
+                out[c] = {"B": bases[i]}
+            else:
+                out[c] = {}          # no relevant neighbours yet
+        return out
+
+    def apply_dispatch(self, state, dispatch):
+        if "B" in dispatch:
+            state.extras["reg_B"] = dispatch["B"]
+        return state
+
+    def storage_bytes(self, state):
+        mem: PrototypeMemory = state.extras["memory"]
+        return (tree_bytes(state.theta) + tree_bytes(state.extras["reg_B"])
+                + mem.size_bytes)

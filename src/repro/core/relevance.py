@@ -1,0 +1,62 @@
+"""Knowledge relevance across the spatial-temporal dimension (paper Eq. 5).
+
+The server keeps the last ``k`` rounds of task features for every client.
+Relevance between client i's *current* task and client j is the
+forgetting-ratio-decayed sum of similarities against j's task history:
+
+    W_ij^(t) = sum_{t'=t-k..t} lambda_f^{t-t'} * S_ij^(t,t')
+
+Rows are normalised over j != i so Eq. (6) is a convex combination of
+neighbour parameters (self-knowledge already lives in A_c / alpha_c).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.similarity import SIMILARITY_FNS
+
+
+@dataclasses.dataclass
+class RelevanceTracker:
+    n_clients: int
+    history_len: int = 6          # k in Eq. (5)
+    forgetting_ratio: float = 0.5  # lambda_f
+    metric: str = "kl"
+
+    def __post_init__(self):
+        # history[c] = list of task features, most recent last
+        self.history: List[list] = [[] for _ in range(self.n_clients)]
+
+    def push(self, client: int, task_feature):
+        h = self.history[client]
+        h.append(np.asarray(task_feature, np.float32))
+        if len(h) > self.history_len:
+            h.pop(0)
+
+    def relevance(self) -> np.ndarray:
+        """W (C, C): row i = normalized relevance of neighbours j for i."""
+        C = self.n_clients
+        fn = SIMILARITY_FNS[self.metric]
+        W = np.zeros((C, C), np.float32)
+        for i in range(C):
+            if not self.history[i]:
+                continue
+            cur = jnp.asarray(self.history[i][-1])
+            for j in range(C):
+                if i == j or not self.history[j]:
+                    continue
+                acc, hj = 0.0, self.history[j]
+                for age, feat in enumerate(reversed(hj)):
+                    if age >= self.history_len:
+                        break
+                    s = float(fn(cur, jnp.asarray(feat)))
+                    acc += (self.forgetting_ratio ** age) * s
+                W[i, j] = acc
+        # row-normalise over neighbours
+        rows = W.sum(1, keepdims=True)
+        W = np.divide(W, rows, out=np.zeros_like(W), where=rows > 0)
+        return W

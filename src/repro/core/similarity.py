@@ -1,0 +1,53 @@
+"""Task-similarity functions Π(·,·) over task features (paper Eq. 4).
+
+Task features are mean prototypes (Eq. 3). The paper adopts KL divergence
+(Table VI shows it beats cosine/euclidean); we expose all three. Similarities
+are mapped to [0, 1]-ish relevance scores (higher = more relevant) so that
+Eq. (5)'s exponentially-decayed accumulation and Eq. (6)'s weighted
+aggregation receive *weights*, not divergences.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _as_dist(x, axis=-1):
+    """Softmax-normalize a task feature into a distribution (fp64-safe)."""
+    x = x.astype(jnp.float32)
+    return jax.nn.softmax(x, axis=axis)
+
+
+def kl_similarity(a, b):
+    """exp(-KL(a||b)) with softmax-normalised features. a,b: (..., D)."""
+    p, q = _as_dist(a), _as_dist(b)
+    kl = jnp.sum(p * (jnp.log(p + 1e-12) - jnp.log(q + 1e-12)), -1)
+    return jnp.exp(-kl)
+
+
+def cosine_similarity(a, b):
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    num = jnp.sum(a * b, -1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-12
+    return 0.5 * (1.0 + num / den)
+
+
+def euclidean_similarity(a, b):
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    d = jnp.linalg.norm(a - b, axis=-1)
+    return jnp.exp(-d)
+
+
+SIMILARITY_FNS = {
+    "kl": kl_similarity,
+    "cosine": cosine_similarity,
+    "euclidean": euclidean_similarity,
+}
+
+
+def pairwise_similarity(feats_a, feats_b, metric: str = "kl"):
+    """All-pairs similarity: (N, D) x (M, D) -> (N, M)."""
+    fn = SIMILARITY_FNS[metric]
+    return jax.vmap(lambda fa: jax.vmap(lambda fb: fn(fa, fb))(feats_b))(feats_a)

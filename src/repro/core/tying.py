@@ -1,0 +1,23 @@
+"""Parameter tying regularization (paper §IV-C, ablated in Table III).
+
+All parameter *changes* are summarised into a penalty so that models fit new
+tasks with minimal, sparse movement of prior knowledge:
+
+    L_tie = lambda_tie * sum |theta - theta_prev|_1  (+ l2 * |A|_2^2 sparsity)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_sub
+
+
+def tying_loss(theta, theta_prev, lam_l1: float = 1e-4, lam_l2: float = 0.0):
+    diff = tree_sub(theta, theta_prev)
+    l1 = sum(jnp.sum(jnp.abs(d)) for d in jax.tree.leaves(diff))
+    loss = lam_l1 * l1
+    if lam_l2:
+        l2 = sum(jnp.sum(jnp.square(d)) for d in jax.tree.leaves(diff))
+        loss = loss + lam_l2 * l2
+    return loss

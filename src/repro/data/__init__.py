@@ -1,0 +1,3 @@
+from repro.data.loader import LoaderConfig, PrefetchLoader, TokenStream
+from repro.data.synthetic import FederatedReIDBenchmark, Task
+from repro.data.tokens import synthetic_lm_batch

@@ -1,0 +1,5 @@
+from repro.evalreid.retrieval import (
+    distance_matrix,
+    evaluate_retrieval,
+    l2_normalize,
+)

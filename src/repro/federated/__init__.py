@@ -1,0 +1,3 @@
+from repro.federated.base import ClientState, Strategy
+from repro.federated.simulation import SimulationResult, run_simulation
+from repro.federated.strategies import FedAvg, FedCurv, FedProx, FedWeIT

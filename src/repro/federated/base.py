@@ -1,0 +1,138 @@
+"""Shared machinery for federated/lifelong strategies.
+
+A Strategy owns per-client state and defines three hooks:
+
+    local_train(client, state, task_protos, labels, rnd)  -> state, upload
+    server_round(rnd, uploads)                            -> dispatches
+    apply_dispatch(state, dispatch)                       -> state
+
+The simulation (repro/federated/simulation.py) drives C clients through the
+task stream, moving exactly the payloads each strategy declares — the comm
+log measures those payloads, reproducing the paper's S2C/C2S accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import edge_model as EM
+from repro.train.optimizer import adam, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class ClientState:
+    theta: Any                        # the *trainable* pytree (strategy-defined)
+    opt_state: Any = None
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Strategy:
+    """Base: plain local training (STL)."""
+
+    name = "stl"
+    uses_server = False
+
+    def __init__(self, cfg: EM.EdgeModelConfig, *, lr=1e-3, weight_decay=1e-5,
+                 epochs=5, batch=64, seed=0):
+        self.cfg = cfg
+        self.lr = lr
+        self.epochs = epochs
+        self.batch = batch
+        self.opt = adam(lr=lr, weight_decay=weight_decay)
+        self._jit_cache: Dict[str, Callable] = {}
+        self.rng = np.random.default_rng(seed)
+
+    # ---- default loss: CE on adaptive layers --------------------------------
+    def make_theta(self, trainable, extras):
+        """Map the trainable pytree to actual adaptive params (identity for
+        most methods; FedSTIL: theta = B ⊙ alpha + A)."""
+        return trainable
+
+    def loss(self, trainable, protos, labels, extras):
+        return EM.ce_loss(self.make_theta(trainable, extras), protos, labels)
+
+    def regularizer(self, trainable, extras):
+        return 0.0
+
+    # ---- generic minibatch trainer ------------------------------------------
+    def _train_fn(self):
+        if "train" not in self._jit_cache:
+            @jax.jit
+            def step(trainable, opt_state, protos, labels, extras):
+                def lf(th):
+                    return (self.loss(th, protos, labels, extras)
+                            + self.regularizer(th, extras))
+                loss, grads = jax.value_and_grad(lf)(trainable)
+                grads, _ = clip_by_global_norm(grads, 1.0)
+                updates, opt_state = self.opt.update(grads, opt_state, trainable)
+                return apply_updates(trainable, updates), opt_state, loss
+            self._jit_cache["train"] = step
+        return self._jit_cache["train"]
+
+    def _run_epochs(self, state: ClientState, protos, labels,
+                    rehearsal: Optional[Tuple] = None):
+        step = self._train_fn()
+        n = len(protos)
+        opt_state = state.opt_state or self.opt.init(state.theta)
+        theta = state.theta
+        extras = self._loss_extras(state)
+        last = 0.0
+        for _ in range(self.epochs):
+            idx = self.rng.choice(n, size=min(self.batch, n), replace=n < self.batch)
+            px, py = protos[idx], labels[idx]
+            if rehearsal is not None:
+                rx, ry = rehearsal
+                # fixed rehearsal batch (static shapes -> single jit)
+                ridx = self.rng.choice(len(rx), size=self.batch // 2, replace=True)
+                px = np.concatenate([px, rx[ridx]])
+                py = np.concatenate([py, ry[ridx]])
+            theta, opt_state, loss = step(theta, opt_state,
+                                          jnp.asarray(px), jnp.asarray(py), extras)
+            last = float(loss)
+        state.theta = theta
+        state.opt_state = opt_state
+        return state, last
+
+    def _loss_extras(self, state: ClientState):
+        ex = {k: v for k, v in state.extras.items() if k.startswith("reg_")}
+        return ex if ex else {"reg_dummy": jnp.zeros(())}
+
+    # ---- strategy API --------------------------------------------------------
+    def init_client(self, key) -> ClientState:
+        return ClientState(theta=EM.init_adaptive_layers(key, self.cfg))
+
+    def local_train(self, client: int, state: ClientState, protos, labels,
+                    rnd: int, **_):
+        state, loss = self._run_epochs(state, protos, labels)
+        return state, None   # STL uploads nothing
+
+    def server_round(self, rnd: int, uploads: Dict[int, Any]) -> Dict[int, Any]:
+        return {}
+
+    def apply_dispatch(self, state: ClientState, dispatch) -> ClientState:
+        return state
+
+    # comm payload sizing (FedWeIT overrides with sparse accounting)
+    def upload_bytes(self, upload) -> int:
+        from repro.common.pytree import tree_bytes
+        return tree_bytes(upload)
+
+    def dispatch_bytes(self, dispatch) -> int:
+        from repro.common.pytree import tree_bytes
+        return tree_bytes(dispatch)
+
+    def features(self, state: ClientState, protos):
+        feats, _ = EM.adaptive_forward(self._eval_theta(state), jnp.asarray(protos))
+        return np.asarray(feats)
+
+    def _eval_theta(self, state: ClientState):
+        return state.theta
+
+    def storage_bytes(self, state: ClientState) -> int:
+        from repro.common.pytree import tree_bytes
+        return tree_bytes(state.theta)

@@ -1,0 +1,225 @@
+"""Federated(-lifelong) baselines (paper Table II):
+
+  * FedAvg  [Konečný+ 16]: upload theta, dispatch the uniform mean.
+  * FedProx [Li+ 20]: FedAvg + proximal term μ/2||θ − θ_global||².
+  * FedCurv [Shoham+ 19]: FedAvg + transmitted Fisher information — clients
+    regularise towards *other* clients' important parameters. The extra
+    matrices are exactly why its comm cost explodes in Table II.
+  * FedWeIT [Yoon+ 21]: decomposed θ = B ⊙ m + A_local + Σ_j attn_j · A_j;
+    sparse task-adaptive params are exchanged; needs task IDs (the paper
+    grants it those). Settings (a)/(b) trade comm for accuracy via l1.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_bytes, tree_scale, tree_zeros_like
+from repro.core import edge_model as EM
+from repro.core.aggregation import fedavg_aggregate
+from repro.federated.base import ClientState, Strategy
+
+
+class FedAvg(Strategy):
+    name = "fedavg"
+    uses_server = True
+
+    def local_train(self, client, state, protos, labels, rnd, **_):
+        state, _ = self._run_epochs(state, protos, labels)
+        return state, {"theta": state.theta}
+
+    def server_round(self, rnd, uploads):
+        thetas = [u["theta"] for u in uploads.values()]
+        mean = fedavg_aggregate(thetas)
+        return {c: {"theta": mean} for c in uploads}
+
+    def apply_dispatch(self, state, dispatch):
+        state.theta = dispatch["theta"]
+        state.opt_state = None          # fresh optimizer on new global params
+        return state
+
+
+class FedProx(FedAvg):
+    name = "fedprox"
+
+    def __init__(self, cfg, *, mu=0.01, **kw):
+        super().__init__(cfg, **kw)
+        self.mu = mu
+
+    def init_client(self, key):
+        st = super().init_client(key)
+        st.extras["reg_global"] = jax.tree.map(jnp.array, st.theta)
+        return st
+
+    def regularizer(self, trainable, extras):
+        pen = sum(jnp.sum(jnp.square(t - g))
+                  for t, g in zip(jax.tree.leaves(trainable),
+                                  jax.tree.leaves(extras["reg_global"])))
+        return 0.5 * self.mu * pen
+
+    def apply_dispatch(self, state, dispatch):
+        state = super().apply_dispatch(state, dispatch)
+        state.extras["reg_global"] = dispatch["theta"]
+        return state
+
+
+class FedCurv(FedAvg):
+    name = "fedcurv"
+
+    def __init__(self, cfg, *, lam=0.01, **kw):
+        super().__init__(cfg, **kw)
+        self.lam = lam
+
+    def init_client(self, key):
+        st = super().init_client(key)
+        z = tree_zeros_like(st.theta)
+        st.extras["reg_fisher_sum"] = z
+        st.extras["reg_fisher_theta_sum"] = tree_zeros_like(st.theta)
+        return st
+
+    def regularizer(self, trainable, extras):
+        # sum_j F_j (θ - θ_j)^2 = θ² ΣF - 2 θ Σ(Fθ) + const
+        pen = sum(
+            jnp.sum(fs * jnp.square(t)) - 2.0 * jnp.sum(ft * t)
+            for fs, ft, t in zip(
+                jax.tree.leaves(extras["reg_fisher_sum"]),
+                jax.tree.leaves(extras["reg_fisher_theta_sum"]),
+                jax.tree.leaves(trainable)))
+        return 0.5 * self.lam * pen
+
+    def _fisher(self, theta, protos, labels):
+        # chunked (batch>=8): BN gradient is undefined at batch size 1
+        n = (len(protos) // 8) * 8
+        px = protos[:n].reshape(-1, 8, protos.shape[-1])
+        py = labels[:n].reshape(-1, 8)
+        g = jax.vmap(lambda x, y: jax.grad(EM.ce_loss)(theta, x, y))(px, py)
+        return jax.tree.map(lambda gg: jnp.mean(jnp.square(gg), 0), g)
+
+    def local_train(self, client, state, protos, labels, rnd, **_):
+        state, _ = self._run_epochs(state, protos, labels)
+        n = min(len(protos), 64)
+        fisher = self._fisher(state.theta, jnp.asarray(protos[:n]),
+                              jnp.asarray(labels[:n]))
+        ftheta = jax.tree.map(lambda f, t: f * t, fisher, state.theta)
+        # upload = theta + fisher + fisher*theta  (3x the FedAvg payload!)
+        return state, {"theta": state.theta, "fisher": fisher, "ftheta": ftheta}
+
+    def server_round(self, rnd, uploads):
+        thetas = [u["theta"] for u in uploads.values()]
+        mean = fedavg_aggregate(thetas)
+        out = {}
+        for c in uploads:
+            others = [u for cc, u in uploads.items() if cc != c]
+            fsum = jax.tree.map(lambda *xs: sum(xs), *[o["fisher"] for o in others])
+            ftsum = jax.tree.map(lambda *xs: sum(xs), *[o["ftheta"] for o in others])
+            out[c] = {"theta": mean, "fisher_sum": fsum, "ftheta_sum": ftsum}
+        return out
+
+    def apply_dispatch(self, state, dispatch):
+        state.theta = dispatch["theta"]
+        state.opt_state = None
+        state.extras["reg_fisher_sum"] = dispatch["fisher_sum"]
+        state.extras["reg_fisher_theta_sum"] = dispatch["ftheta_sum"]
+        return state
+
+    def storage_bytes(self, state):
+        return (tree_bytes(state.theta)
+                + tree_bytes(state.extras["reg_fisher_sum"])
+                + tree_bytes(state.extras["reg_fisher_theta_sum"]))
+
+
+class FedWeIT(Strategy):
+    """θ_c = B ⊙ m_c + A_c + Σ_j α_cj A_j  with l1-sparse A.
+
+    Exchanged: A_c up; base + all neighbours' (sparsified) A down.
+    """
+
+    name = "fedweit"
+    uses_server = True
+
+    def __init__(self, cfg, *, l1=1e-4, l2=1e-6, n_clients=5, **kw):
+        super().__init__(cfg, **kw)
+        self.l1 = l1
+        self.l2 = l2
+        self.n_clients = n_clients
+
+    def init_client(self, key):
+        base = EM.init_adaptive_layers(key, self.cfg)
+        trainable = {
+            "mask": jax.tree.map(jnp.ones_like, base),
+            "A": jax.tree.map(jnp.zeros_like, base),
+            "attn": jnp.zeros((self.n_clients,)),
+        }
+        st = ClientState(theta=trainable)
+        st.extras["reg_base"] = base
+        st.extras["reg_neighbors"] = jax.tree.map(
+            lambda x: jnp.zeros((self.n_clients,) + x.shape, x.dtype), base)
+        return st
+
+    def make_theta(self, trainable, extras):
+        base = extras["reg_base"]
+        neigh = extras["reg_neighbors"]
+        attn = jax.nn.softmax(trainable["attn"])
+        theta = jax.tree.map(
+            lambda b, m, a, nb: b * jax.nn.sigmoid(m) + a
+            + jnp.einsum("c,c...->...", attn, nb),
+            base, trainable["mask"], trainable["A"], neigh)
+        return theta
+
+    def regularizer(self, trainable, extras):
+        l1 = sum(jnp.sum(jnp.abs(a)) for a in jax.tree.leaves(trainable["A"]))
+        l2 = sum(jnp.sum(jnp.square(a)) for a in jax.tree.leaves(trainable["A"]))
+        return self.l1 * l1 + self.l2 * l2
+
+    def _sparsify(self, A, keep_frac=0.3):
+        """Keep top-|keep_frac| magnitude entries (comm saving of l1)."""
+        def sp(a):
+            flat = jnp.abs(a).ravel()
+            k = max(1, int(keep_frac * flat.size))
+            thr = jnp.sort(flat)[-k]
+            return jnp.where(jnp.abs(a) >= thr, a, 0.0)
+        return jax.tree.map(sp, A)
+
+    def sparse_bytes(self, A, keep_frac=0.3) -> int:
+        """Effective sparse payload: values + indices for kept entries."""
+        total = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(A))
+        kept = int(total * keep_frac)
+        return kept * (4 + 4)
+
+    def local_train(self, client, state, protos, labels, rnd, **_):
+        state, _ = self._run_epochs(state, protos, labels)
+        A_sparse = self._sparsify(state.theta["A"])
+        return state, {"A": A_sparse, "base_grad": state.theta["mask"]}
+
+    def server_round(self, rnd, uploads):
+        # base = fedavg of (B ⊙ sigmoid(mask)) proxies: here simply keep base
+        # fixed and relay every client's sparse A to every other client.
+        out = {}
+        allA = {c: u["A"] for c, u in uploads.items()}
+        for c in uploads:
+            out[c] = {"neighbors": allA}
+        return out
+
+    def apply_dispatch(self, state, dispatch):
+        neigh = dispatch["neighbors"]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[neigh[c] for c in sorted(neigh)])
+        state.extras["reg_neighbors"] = stacked
+        return state
+
+    def _eval_theta(self, state):
+        return self.make_theta(state.theta, state.extras)
+
+    def storage_bytes(self, state):
+        return (tree_bytes(state.theta) + tree_bytes(state.extras["reg_base"])
+                + tree_bytes(state.extras["reg_neighbors"]))
+
+    def upload_bytes(self, upload) -> int:
+        return self.sparse_bytes(upload["A"]) + tree_bytes(upload["base_grad"])
+
+    def dispatch_bytes(self, dispatch) -> int:
+        return sum(self.sparse_bytes(a) for a in dispatch["neighbors"].values())

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``backend`` selects the implementation:
+  * "ref"       — pure-jnp oracle (default on CPU / in the dry-run HLO)
+  * "pallas"    — compiled Pallas TPU kernel (production)
+  * "interpret" — Pallas kernel body interpreted on CPU (correctness tests)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.adaptive_combine import adaptive_combine as _combine
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.kl_similarity import kl_similarity as _kl
+from repro.kernels.pairwise_dist import pairwise_dist as _pdist
+from repro.kernels.relevance_aggregate import relevance_aggregate as _agg
+
+DEFAULT_BACKEND = "ref"
+
+
+def _dispatch(backend):
+    b = backend or DEFAULT_BACKEND
+    if b not in ("ref", "pallas", "interpret"):
+        raise ValueError(f"unknown kernel backend {b!r}")
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "backend"))
+def flash_attention(q, k, v, *, causal: bool = True, backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.flash_attention_ref(q, k, v, causal=causal)
+    return _flash(q, k, v, causal=causal, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def pairwise_dist(q, g, *, backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.pairwise_dist_ref(q, g)
+    return _pdist(q, g, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def adaptive_combine(base, alpha, a, *, backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.adaptive_combine_ref(base, alpha, a)
+    return _combine(base, alpha, a, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def relevance_aggregate(w, thetas, *, backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.relevance_aggregate_ref(w, thetas)
+    return _agg(w, thetas, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def kl_similarity(a, b_, *, backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.kl_similarity_ref(a, b_)
+    return _kl(a, b_, interpret=(b == "interpret"))

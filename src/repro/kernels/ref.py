@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are also the implementations the CPU benchmarks and the dry-run HLO
+use (identical math, no pallas_call in the lowered program).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (B,H,Sq,hd), k/v: (B,H,Sk,hd) -> (B,H,Sq,hd). fp32 softmax."""
+    hd = q.shape[-1]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * s
+    if causal:
+        Sq, Sk = logits.shape[-2], logits.shape[-1]
+        mask = jnp.arange(Sk)[None, :] <= (jnp.arange(Sq)[:, None] + (Sk - Sq))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def pairwise_dist_ref(q, g):
+    """Squared euclidean distances: (Q,D) x (G,D) -> (Q,G), fp32."""
+    q = q.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    qq = jnp.sum(q * q, -1, keepdims=True)
+    gg = jnp.sum(g * g, -1)
+    return qq + gg[None, :] - 2.0 * (q @ g.T)
+
+
+def adaptive_combine_ref(base, alpha, a):
+    """FedSTIL Eq. 2: theta = B ⊙ alpha + A (elementwise, any shape)."""
+    return base * alpha + a
+
+
+def relevance_aggregate_ref(w, thetas):
+    """FedSTIL Eq. 6: (C,C) x (C,P) -> (C,P), fp32 accumulate."""
+    return (w.astype(jnp.float32) @ thetas.astype(jnp.float32)).astype(thetas.dtype)
+
+
+def kl_similarity_ref(a, b):
+    """exp(-KL(softmax(a_i) || softmax(b_j))): (N,D) x (M,D) -> (N,M)."""
+    p = jax.nn.softmax(a.astype(jnp.float32), -1)
+    logp = jax.nn.log_softmax(a.astype(jnp.float32), -1)
+    logq = jax.nn.log_softmax(b.astype(jnp.float32), -1)
+    h = jnp.sum(p * logp, -1)                    # (N,)
+    cross = p @ logq.T                            # (N,M)
+    return jnp.exp(-(h[:, None] - cross))

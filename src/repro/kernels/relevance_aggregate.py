@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: personalized server aggregation (paper Eq. 6)
+
+    B = W @ Θ,   W: (C, C) relevance,  Θ: (C, P) stacked client params.
+
+P is the flattened adaptive parameter count (millions); C is small (edge
+clients). W stays resident in VMEM; Θ streams in (C x p_block) tiles and
+every tile is one (C,C)x(C,pb) MXU matmul — the kernel is purely
+bandwidth-bound, reading each client's parameters exactly once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+P_BLOCK = 2048
+
+
+def _agg_kernel(w_ref, t_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)          # (C, C)
+    t = t_ref[...].astype(jnp.float32)          # (C, pb)
+    o_ref[...] = jax.lax.dot_general(
+        w, t, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def relevance_aggregate(w, thetas, *, p_block: int = P_BLOCK,
+                        interpret: bool = True):
+    """w: (C, C); thetas: (C, P) -> (C, P)."""
+    C, Pn = thetas.shape
+    p_block = min(p_block, max(128, Pn))
+    Pp = (Pn + p_block - 1) // p_block * p_block
+    tp = jnp.pad(thetas, ((0, 0), (0, Pp - Pn)))
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(Pp // p_block,),
+        in_specs=[
+            pl.BlockSpec((C, C), lambda i: (0, 0)),
+            pl.BlockSpec((C, p_block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((C, p_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((C, Pp), thetas.dtype),
+        interpret=interpret,
+    )(w, tp)
+    return out[:, :Pn]

@@ -1,0 +1,2 @@
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.steps import build_step, input_specs

@@ -1,0 +1,229 @@
+"""Step functions lowered by the dry-run / launched on real meshes.
+
+Everything is written for ``jax.shard_map`` over the production mesh: model
+code receives local shards and emits explicit collectives via AxisCtx.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.common.axes import AxisCtx
+from repro.configs.base import (
+    LONG_CONTEXT_WINDOW,
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeConfig,
+)
+from repro.models import lm
+from repro.models import layers as MLAYERS
+from repro.sharding import specs as SPECS
+from repro.train import trainer as TR
+from repro.train.optimizer import adam
+
+ENC_PAD = 1536   # whisper stub frames padded 1500 -> 1536 for TP shardability
+
+
+def axis_ctx(cfg: ModelConfig, multi_pod: bool) -> AxisCtx:
+    return AxisCtx(tp="model", dp="data", pod="pod" if multi_pod else None,
+                   fsdp=cfg.fsdp)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {}
+    if cfg.family == "vlm":
+        batch["tokens"] = _sds((B, S - cfg.n_vision_tokens), jnp.int32)
+        batch["labels"] = _sds((B, S - cfg.n_vision_tokens), jnp.int32)
+        batch["vision_embeds"] = _sds((B, cfg.n_vision_tokens, cfg.d_model),
+                                      jnp.bfloat16)
+    elif cfg.family == "encdec":
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["labels"] = _sds((B, S), jnp.int32)
+        batch["frames"] = _sds((B, ENC_PAD, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def prefill_batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    b = train_batch_struct(cfg, shape)
+    b.pop("labels")
+    return b
+
+
+def decode_inputs_struct(cfg: ModelConfig, shape: ShapeConfig,
+                         kv_dtype=jnp.bfloat16):
+    """(cache, token, pos) structs. long_500k uses a ring-buffer cache of the
+    sliding window size for attention caches (SSM states are O(1) anyway)."""
+    B, S = shape.global_batch, shape.seq_len
+    ring = shape.name == "long_500k" and cfg.family not in ("ssm",)
+    s_cache = LONG_CONTEXT_WINDOW if ring else S
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, s_cache, enc_seq_local=ENC_PAD,
+                              dtype=kv_dtype, tp=1))
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache, token, pos
+
+
+def input_specs(arch_cfg: ModelConfig, shape_name: str):
+    """Public helper (see system spec): ShapeDtypeStruct stand-ins for every
+    model input of (arch, input-shape)."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        return train_batch_struct(arch_cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_batch_struct(arch_cfg, shape)
+    cache, token, pos = decode_inputs_struct(arch_cfg, shape)
+    return {"cache": cache, "token": token, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# step builders (already shard_map-wrapped; .lower() with global structs)
+# ---------------------------------------------------------------------------
+
+
+def _shmap(fn, mesh, in_specs, out_specs, check=True):
+    # check_vma=True: jax tracks replication so psum transposes correctly
+    # (with it off, grad-of-psum double-counts across the axis). Gradient
+    # paths therefore ALWAYS run checked; the one exception is batch-
+    # replicated decode of FSDP archs (no autodiff there), where gathered
+    # weights make semantically-replicated outputs formally "varying".
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=check)
+
+
+def abstract_train_state(cfg: ModelConfig, tp: int):
+    """Abstract (never-allocated) FedSTIL train state pytrees."""
+    opt = adam(lr=1e-3, weight_decay=1e-5)
+
+    def build():
+        st = TR.init_train_state(cfg, jax.random.PRNGKey(0), tp=tp, optimizer=opt)
+        return (st.frozen, st.B, st.trainable, st.opt_state)
+    return jax.eval_shape(build)
+
+
+def build_train_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                     *, multi_pod: bool, layout: str = "tp"):
+    """layout="tp": Megatron TP over the model axis (default).
+    layout="dp": small-model configuration — the model axis carries BATCH
+    (params replicated, zero activation collectives; only the adaptive-grad
+    psum remains). §Perf hillclimb for edge-scale archs."""
+    tp = mesh.shape["model"]
+    dp = mesh.shape["data"]
+    window = 0
+
+    if layout == "dp":
+        ax = AxisCtx(tp=None, dp="data", pod="pod" if multi_pod else None,
+                     dp2="model", fsdp=False)
+        tp_build = 1
+    else:
+        ax = axis_ctx(cfg, multi_pod)
+        tp_build = tp
+
+    frozen, B, trainable, opt_state = abstract_train_state(cfg, tp_build)
+    batch = train_batch_struct(cfg, shape)
+
+    if layout == "dp":
+        rep = lambda tree: jax.tree.map(
+            lambda l: P(*([None] * len(l.shape))), tree)
+        eff_dp = dp * tp * (2 if multi_pod else 1)
+        if shape.global_batch % eff_dp:
+            raise ValueError("dp layout needs batch divisible by all axes")
+        baxes = (("pod", "data", "model") if multi_pod else ("data", "model"))
+        bspec = jax.tree.map(
+            lambda l: P(*((baxes,) + (None,) * (len(l.shape) - 1))), batch)
+        in_specs = (rep(frozen), rep(B), rep(trainable), rep(opt_state), bspec)
+        out_specs = (rep(trainable), rep(opt_state),
+                     {"loss": P(), "ce": P(), "moe_aux": P(), "grad_norm": P()})
+    else:
+        sp = functools.partial(SPECS.tree_param_specs, cfg, tp_size=tp)
+        in_specs = (sp(frozen), sp(B), sp(trainable), sp(opt_state),
+                    SPECS.batch_specs(cfg, batch, shape.global_batch, dp,
+                                      multi_pod))
+        out_specs = (sp(trainable), sp(opt_state),
+                     {"loss": P(), "ce": P(), "moe_aux": P(), "grad_norm": P()})
+
+    step = TR.make_train_step(cfg, ax=ax, window=window, tie_lambda=1e-4)
+    fn = _shmap(step, mesh, in_specs, out_specs)
+    args = (frozen, B, trainable, opt_state, batch)
+    return jax.jit(fn), args, in_specs
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                       *, multi_pod: bool):
+    tp = mesh.shape["model"]
+    dp = mesh.shape["data"]
+    ax = axis_ctx(cfg, multi_pod)
+
+    params = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), tp=tp))
+    batch = prefill_batch_struct(cfg, shape)
+
+    def prefill(params, batch):
+        x, _ = lm.forward(cfg, params, batch, ax)
+        last = x[:, -1:, :]
+        tok, _ = MLAYERS.lm_head_logits(cfg, params["head"], last, ax)
+        return tok.astype(jnp.int32)
+
+    b_axes = SPECS.batch_axes(shape.global_batch, dp, multi_pod)
+    in_specs = (SPECS.tree_param_specs(cfg, params, tp_size=tp),
+                SPECS.batch_specs(cfg, batch, shape.global_batch, dp, multi_pod))
+    out_specs = P(b_axes, None)
+    fn = _shmap(prefill, mesh, in_specs, out_specs)
+    return jax.jit(fn), (params, batch), in_specs
+
+
+def build_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                      *, multi_pod: bool, weight_stationary: bool = False,
+                      kv_dtype=jnp.bfloat16):
+    tp = mesh.shape["model"]
+    dp = mesh.shape["data"]
+    ax = axis_ctx(cfg, multi_pod)
+    if weight_stationary:
+        ax = dataclasses.replace(ax, decode_ws=True)
+    ring = shape.name == "long_500k" and cfg.family not in ("ssm",)
+    window = LONG_CONTEXT_WINDOW if shape.name == "long_500k" else 0
+
+    params = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0), tp=tp))
+    cache, token, pos = decode_inputs_struct(cfg, shape, kv_dtype=kv_dtype)
+
+    def serve_step(params, cache, token, pos):
+        return lm.decode_step(cfg, params, cache, token, pos, ax,
+                              window=window, ring=ring, enc_len=ENC_PAD)
+
+    p_specs = SPECS.tree_param_specs(cfg, params, tp_size=tp)
+    c_specs = SPECS.cache_specs(cfg, cache, shape.global_batch, dp, multi_pod)
+    b_axes = SPECS.batch_axes(shape.global_batch, dp, multi_pod)
+    in_specs = (p_specs, c_specs, P(b_axes, None), P())
+    out_specs = (P(b_axes, None), c_specs)
+    check = not ((b_axes is None and cfg.fsdp) or weight_stationary)
+    fn = _shmap(serve_step, mesh, in_specs, out_specs, check=check)
+    return jax.jit(fn), (params, cache, token, pos), in_specs
+
+
+def build_step(cfg: ModelConfig, mesh, shape_name: str, *, multi_pod: bool):
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        return build_train_step(cfg, mesh, shape, multi_pod=multi_pod)
+    if shape.mode == "prefill":
+        return build_prefill_step(cfg, mesh, shape, multi_pod=multi_pod)
+    return build_decode_step(cfg, mesh, shape, multi_pod=multi_pod)

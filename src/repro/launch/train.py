@@ -1,0 +1,97 @@
+"""Training launcher.
+
+Two regimes:
+  * CPU / reduced (default here): runs REAL steps on the reduced config —
+    the e2e driver used by examples/train_e2e.py.
+  * Production mesh: builds the shard_map'd train step for the full config
+    (the same function the dry-run lowers) — pass --mesh single|multi on a
+    real TPU slice.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --steps 100 --batch 8 --seq 64 [--reduced] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data.tokens import synthetic_lm_batch
+from repro.train import init_train_state, make_full_train_step, make_train_step
+from repro.train.optimizer import adam, cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full-model", dest="reduced", action="store_false")
+    ap.add_argument("--full", action="store_true",
+                    help="train ALL params (beyond-paper), not just adaptive")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    opt = adam(lr=args.lr, weight_decay=1e-5,
+               schedule=cosine_schedule(warmup=20, total=args.steps))
+    rng = np.random.default_rng(args.seed)
+
+    def batch_extras(B, S):
+        out = {}
+        if cfg.family == "vlm":
+            out["vision_embeds"] = jnp.asarray(
+                rng.standard_normal((B, cfg.n_vision_tokens, cfg.d_model)),
+                jnp.float32)
+        if cfg.family == "encdec":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((B, cfg.enc_seq, cfg.d_model)), jnp.float32)
+        return out
+
+    st = init_train_state(cfg, jax.random.PRNGKey(args.seed), optimizer=opt)
+    if args.full:
+        from repro.models import init_params
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = opt.init(params)
+        step = jax.jit(make_full_train_step(cfg, optimizer=opt))
+    else:
+        trainable, opt_state = st.trainable, st.opt_state
+        step = jax.jit(make_train_step(cfg, optimizer=opt, tie_lambda=1e-4))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        toks, labels = synthetic_lm_batch(rng, args.batch, args.seq,
+                                          cfg.vocab_size)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+                 **batch_extras(args.batch, args.seq)}
+        if args.full:
+            params, opt_state, m = step(params, opt_state, batch)
+        else:
+            trainable, opt_state, m = step(st.frozen, st.B, trainable,
+                                           opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
+                  f"ce {float(m['ce']):.4f}  {time.time()-t0:.1f}s", flush=True)
+
+    if args.ckpt:
+        tree = params if args.full else {"trainable": trainable, "B": st.B}
+        save_checkpoint(args.ckpt, tree, metadata={"arch": args.arch,
+                                                   "steps": args.steps})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.lifelong.strategies import EWC, ICaRL, MAS, STL

@@ -1,0 +1,149 @@
+"""Lifelong-learning baselines (paper Table II, local-only methods):
+
+  * EWC   [Kirkpatrick+ 17]: diagonal-Fisher penalty on parameter movement.
+  * MAS   [Aljundi+ 18]: importance = |∂||f(x)||²/∂θ| accumulated, same form.
+  * iCaRL [Rebuffi+ 17]: raw-image exemplar rehearsal, nearest-mean selection.
+
+All train locally with no server exchange (comm = 0 / NaN in the paper).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_bytes, tree_zeros_like
+from repro.core import edge_model as EM
+from repro.federated.base import ClientState, Strategy
+
+
+class STL(Strategy):
+    name = "stl"
+
+
+class EWC(Strategy):
+    name = "ewc"
+
+    def __init__(self, cfg, *, lam=0.1, **kw):
+        super().__init__(cfg, **kw)
+        self.lam = lam
+
+    def init_client(self, key):
+        st = super().init_client(key)
+        st.extras["reg_fisher"] = tree_zeros_like(st.theta)
+        st.extras["reg_anchor"] = jax.tree.map(jnp.array, st.theta)
+        return st
+
+    def regularizer(self, trainable, extras):
+        pen = sum(
+            jnp.sum(f * jnp.square(t - a))
+            for f, t, a in zip(jax.tree.leaves(extras["reg_fisher"]),
+                               jax.tree.leaves(trainable),
+                               jax.tree.leaves(extras["reg_anchor"])))
+        return 0.5 * self.lam * pen
+
+    def _importance(self, theta, protos, labels):
+        """Diagonal Fisher: E[grad log p(y|x)^2], estimated over chunks of 8
+        (NOT per-sample: the BN-style standardisation has an undefined
+        gradient at batch size 1 — zero variance)."""
+        n = (len(protos) // 8) * 8
+        px = protos[:n].reshape(-1, 8, protos.shape[-1])
+        py = labels[:n].reshape(-1, 8)
+        def nll(th, x, y):
+            return EM.ce_loss(th, x, y)
+        g = jax.vmap(lambda x, y: jax.grad(nll)(theta, x, y))(px, py)
+        return jax.tree.map(lambda gg: jnp.mean(jnp.square(gg), 0), g)
+
+    def local_train(self, client, state, protos, labels, rnd, *,
+                    consolidate=False, **_):
+        state, _ = self._run_epochs(state, protos, labels)
+        if consolidate:
+            # consolidate at TASK end only (paper/EWC semantics): decayed
+            # accumulation keeps the penalty bounded over many tasks
+            n = min(len(protos), 64)
+            f_new = self._importance(state.theta, jnp.asarray(protos[:n]),
+                                     jnp.asarray(labels[:n]))
+            state.extras["reg_fisher"] = jax.tree.map(
+                lambda old, new: 0.5 * old + new,
+                state.extras["reg_fisher"], f_new)
+            state.extras["reg_anchor"] = state.theta
+        return state, None
+
+    def storage_bytes(self, state):
+        return (tree_bytes(state.theta)
+                + tree_bytes(state.extras["reg_fisher"])
+                + tree_bytes(state.extras["reg_anchor"]))
+
+
+class MAS(EWC):
+    name = "mas"
+
+    def _importance(self, theta, protos, labels):
+        """MAS: sensitivity of the squared output norm (chunked, see EWC)."""
+        n = (len(protos) // 8) * 8
+        px = protos[:n].reshape(-1, 8, protos.shape[-1])
+        def out_norm(th, x):
+            feats, logits = EM.adaptive_forward(th, x)
+            return jnp.mean(jnp.sum(jnp.square(logits), -1))
+        g = jax.vmap(lambda x: jax.grad(out_norm)(theta, x))(px)
+        return jax.tree.map(lambda gg: jnp.mean(jnp.abs(gg), 0), g)
+
+
+class ICaRL(Strategy):
+    """Raw-image exemplar rehearsal (needs the extraction layers to re-encode
+    stored images every round — contrast with FedSTIL's prototype memory)."""
+
+    name = "icarl"
+
+    def __init__(self, cfg, *, memory_size=2000, per_identity=8,
+                 extractor=None, **kw):
+        super().__init__(cfg, **kw)
+        self.memory_size = memory_size
+        self.per_identity = per_identity
+        self.extractor = extractor     # (g_params, raw images) -> prototypes
+
+    def init_client(self, key):
+        st = super().init_client(key)
+        st.extras["mem_x"] = None      # raw images
+        st.extras["mem_y"] = None
+        return st
+
+    def local_train(self, client, state, protos, labels, rnd,
+                    raw_images=None, g_params=None, **_):
+        rehearsal = None
+        if state.extras["mem_x"] is not None and self.extractor is not None:
+            mem_protos = np.asarray(self.extractor(g_params, state.extras["mem_x"]))
+            rehearsal = (mem_protos, state.extras["mem_y"])
+        state, _ = self._run_epochs(state, protos, labels, rehearsal)
+
+        # nearest-mean exemplar selection on raw images
+        if raw_images is not None:
+            feats, _ = EM.adaptive_forward(state.theta, jnp.asarray(protos))
+            feats = np.asarray(feats)
+            keep = []
+            for ident in np.unique(labels):
+                idx = np.nonzero(labels == ident)[0]
+                center = feats[idx].mean(0)
+                d = np.linalg.norm(feats[idx] - center, axis=1)
+                keep.extend(idx[np.argsort(d)[: self.per_identity]].tolist())
+            keep = np.asarray(keep, np.int64)
+            nx, ny = raw_images[keep], labels[keep]
+            if state.extras["mem_x"] is None:
+                state.extras["mem_x"], state.extras["mem_y"] = nx, ny
+            else:
+                state.extras["mem_x"] = np.concatenate([state.extras["mem_x"], nx])
+                state.extras["mem_y"] = np.concatenate([state.extras["mem_y"], ny])
+            if len(state.extras["mem_x"]) > self.memory_size:
+                sel = self.rng.choice(len(state.extras["mem_x"]),
+                                      self.memory_size, replace=False)
+                state.extras["mem_x"] = state.extras["mem_x"][sel]
+                state.extras["mem_y"] = state.extras["mem_y"][sel]
+        return state, None
+
+    def storage_bytes(self, state):
+        extra = 0
+        if state.extras["mem_x"] is not None:
+            extra = state.extras["mem_x"].nbytes + state.extras["mem_y"].nbytes
+        return tree_bytes(state.theta) + extra

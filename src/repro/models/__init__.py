@@ -1,0 +1,7 @@
+from repro.models.lm import (
+    init_params,
+    forward,
+    loss_fn,
+    init_cache,
+    decode_step,
+)

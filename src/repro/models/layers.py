@@ -1,0 +1,582 @@
+"""Core transformer layers, written to run both unsharded (CPU smoke tests)
+and inside ``shard_map`` over the production mesh (Megatron-style TP).
+
+Conventions:
+  * params are nested dicts of jnp arrays; *local* shapes inside shard_map
+    (head/ff/vocab dims divided by TP), full shapes when unsharded.
+  * every function takes an :class:`AxisCtx`; collectives are no-ops when the
+    ctx axes are None, so a single code path serves tests and the dry-run.
+  * attention is never materialized as a full (S x S) score tensor: prefill /
+    train uses chunked online-softmax (Rabe&Staats / flash-style) via
+    ``lax.scan`` over KV blocks; decode uses a sequence-sharded KV cache with
+    a flash-decoding partial-softmax merge over the ``model`` axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.common.axes import AxisCtx, UNSHARDED
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_params(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        out = xf * lax.rsqrt(ms + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_head_norm(scale, x):
+    """qk-norm: RMS over the head_dim of (B,S,H,hd)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * lax.rsqrt(ms + 1e-6) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings (vocab-sharded over TP)
+# ---------------------------------------------------------------------------
+
+
+def embed_params(key, cfg: ModelConfig, vocab_local: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"table": _dense_init(key, (vocab_local, cfg.d_model), dt, scale=0.02)}
+
+
+def embed_lookup(cfg: ModelConfig, p, ids, ax: AxisCtx):
+    """ids (B,S) int32 with *global* vocab ids; table is vocab-sharded."""
+    table = p["table"]
+    v_loc = table.shape[0]
+    off = ax.tp_index() * v_loc
+    local = ids - off
+    valid = (local >= 0) & (local < v_loc)
+    local = jnp.clip(local, 0, v_loc - 1)
+    emb = jnp.take(table, local, axis=0)
+    emb = jnp.where(valid[..., None], emb, jnp.zeros_like(emb))
+    return ax.psum_tp(emb)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    ang = pos[:, None] * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# ---------------------------------------------------------------------------
+# LM head: vocab-sharded cross entropy (stable, fp32)
+# ---------------------------------------------------------------------------
+
+
+def head_params(key, cfg: ModelConfig, vocab_local: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"w": _dense_init(key, (cfg.d_model, vocab_local), dt)}
+
+
+def _local_vocab_mask(cfg: ModelConfig, v_loc: int, ax: AxisCtx):
+    """Mask out vocab-padding columns (global id >= true vocab)."""
+    gid = ax.tp_index() * v_loc + jnp.arange(v_loc)
+    return gid < cfg.vocab_size
+
+
+def lm_head_loss(cfg: ModelConfig, p, x, targets, ax: AxisCtx, weights=None):
+    """Mean cross-entropy with the vocab dim sharded over TP.
+
+    x: (B,S,d), targets: (B,S) global ids. Returns scalar mean loss.
+    """
+    logits = jnp.einsum("bsd,dv->bsv", x, p["w"]).astype(jnp.float32)
+    v_loc = logits.shape[-1]
+    vmask = _local_vocab_mask(cfg, v_loc, ax)
+    logits = jnp.where(vmask, logits, -1e30)
+
+    m_loc = jnp.max(logits, -1)
+    # the softmax max-shift is gradient-free; pmax has no JVP rule
+    m = m_loc if ax.tp is None else lax.stop_gradient(
+        lax.pmax(lax.stop_gradient(m_loc), ax.tp))
+    se = jnp.sum(jnp.exp(logits - m[..., None]), -1)
+    lse = jnp.log(ax.psum_tp(se)) + m
+
+    off = ax.tp_index() * v_loc
+    local_t = targets - off
+    valid = (local_t >= 0) & (local_t < v_loc)
+    local_t = jnp.clip(local_t, 0, v_loc - 1)
+    tgt_logit = jnp.take_along_axis(logits, local_t[..., None], -1)[..., 0]
+    tgt_logit = jnp.where(valid, tgt_logit, 0.0)
+    tgt_logit = ax.psum_tp(tgt_logit)
+
+    nll = lse - tgt_logit
+    if weights is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def lm_head_logits(cfg: ModelConfig, p, x, ax: AxisCtx):
+    """Full (gathered) logits for decode sampling: (B,S,V_local)->argmax id."""
+    logits = jnp.einsum("bsd,dv->bsv", x, p["w"]).astype(jnp.float32)
+    v_loc = logits.shape[-1]
+    vmask = _local_vocab_mask(cfg, v_loc, ax)
+    logits = jnp.where(vmask, logits, -1e30)
+    # local argmax + value, then global argmax via pmax trick
+    loc_idx = jnp.argmax(logits, -1)
+    loc_val = jnp.max(logits, -1)
+    gid = loc_idx + ax.tp_index() * v_loc
+    if ax.tp is None:
+        return gid, loc_val
+    best = lax.pmax(loc_val, ax.tp)
+    mine = jnp.where(loc_val >= best, gid, -1)
+    return lax.pmax(mine, ax.tp), best
+
+
+# ---------------------------------------------------------------------------
+# weight-stationary decode matmuls (§Perf hillclimb: FSDP archs decode)
+#
+# Baseline FSDP decode all-gathers EVERY weight over the data axis EVERY
+# token (llama3-405b: ~3.5 GB/device/token -> 277 ms collective-bound).
+# Weight-stationary keeps weights sharded and moves ACTIVATIONS instead
+# (a few MB/token): gather x over data, contract the local k-slice, psum.
+# ---------------------------------------------------------------------------
+
+
+def ws_colshard_matmul(x, w, ax: AxisCtx, bias=None):
+    """x: (B_loc, 1, d) row-local; w: (d/dp, cols_loc) — contraction dim
+    FSDP-sharded over data. Returns (B_loc, 1, cols_loc)."""
+    xg = lax.all_gather(x, ax.dp, axis=0, tiled=True)       # (B_tot, 1, d)
+    k_loc = w.shape[0]
+    idx = lax.axis_index(ax.dp)
+    xk = lax.dynamic_slice_in_dim(xg, idx * k_loc, k_loc, axis=2)
+    part = jnp.einsum("bsd,dk->bsk", xk, w)
+    full = lax.psum(part, ax.dp)                             # (B_tot,1,cols)
+    B_loc = x.shape[0]
+    out = lax.dynamic_slice_in_dim(full, idx * B_loc, B_loc, axis=0)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def ws_rowshard_matmul(o, w, ax: AxisCtx):
+    """o: (B,1,K_loc) with K sharded over model; w: (K_loc, d/dp) — output
+    dim FSDP-sharded over data. Returns (B,1,d) full (psum TP + gather dp)."""
+    part = jnp.einsum("bsf,fd->bsd", o, w)                   # (B,1,d/dp)
+    part = ax.psum_tp(part)
+    return lax.all_gather(part, ax.dp, axis=2, tiled=True)   # (B,1,d)
+
+
+def _use_ws(ax: AxisCtx) -> bool:
+    return bool(ax.decode_ws and ax.fsdp and ax.dp)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_params(key, cfg: ModelConfig, ax_tp_size: int, cross: bool = False):
+    """Global param shapes; TP-local shapes are produced by the sharder.
+
+    q heads padded to a multiple of TP (arctic 56 -> 64); kv weights are
+    replicated when n_kv < TP and each device statically slices its group.
+    """
+    dt = jnp.dtype(cfg.param_dtype)
+    d, hd = cfg.d_model, cfg.hd
+    hp = cfg.padded_heads(ax_tp_size)
+    keys = jax.random.split(key, 8)
+    p = {
+        "wq": _dense_init(keys[0], (d, hp * hd), dt),
+        "wk": _dense_init(keys[1], (d, cfg.n_kv_heads * hd), dt),
+        "wv": _dense_init(keys[2], (d, cfg.n_kv_heads * hd), dt),
+        "wo": _dense_init(keys[3], (hp * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hp * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.ones((hd,), jnp.float32)
+        p["knorm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x, x_kv, ax: AxisCtx, positions, kv_positions):
+    """Returns q (B,S,KVg,R,hd), k,v (B,Skv,KVg,hd) with the local GQA layout.
+
+    KVg = local kv heads, R = local q heads per local kv head.
+    """
+    hd = cfg.hd
+    if _use_ws(ax):
+        # §Perf iteration 2: ONE x-gather + ONE psum for q,k,v (weights
+        # concatenated at trace time) instead of three of each.
+        wqkv = jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=1)
+        bias = (jnp.concatenate([p["bq"], p["bk"], p["bv"]])
+                if cfg.qkv_bias else None)
+        qkv = ws_colshard_matmul(x, wqkv, ax, bias)
+        nq = p["wq"].shape[1]
+        nk = p["wk"].shape[1]
+        q = qkv[..., :nq]
+        k = qkv[..., nq:nq + nk]
+        v = qkv[..., nq + nk:]
+    else:
+        wq = ax.all_gather_param(p["wq"], 0)
+        wk = ax.all_gather_param(p["wk"], 0)
+        wv = ax.all_gather_param(p["wv"], 0)
+        q = jnp.einsum("bsd,dh->bsh", x, wq)
+        k = jnp.einsum("bsd,dh->bsh", x_kv, wk)
+        v = jnp.einsum("bsd,dh->bsh", x_kv, wv)
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+
+    B, S = x.shape[0], x.shape[1]
+    Skv = x_kv.shape[1]
+    h_loc = q.shape[-1] // hd
+    kv_cols = k.shape[-1] // hd
+    q = q.reshape(B, S, h_loc, hd)
+    k = k.reshape(B, Skv, kv_cols, hd)
+    v = v.reshape(B, Skv, kv_cols, hd)
+
+    # kv replicated case (n_kv < TP): slice my group's single kv head.
+    tp = ax.tp_size
+    if ax.tp is not None and cfg.n_kv_heads < tp:
+        group = tp // cfg.n_kv_heads          # devices per kv head
+        kv_idx = ax.tp_index() // group
+        k = lax.dynamic_slice_in_dim(k, kv_idx, 1, axis=2)
+        v = lax.dynamic_slice_in_dim(v, kv_idx, 1, axis=2)
+        kvg = 1
+    else:
+        kvg = kv_cols
+    r = h_loc // kvg
+
+    if cfg.qk_norm:
+        q = rms_head_norm(p["qnorm"], q)
+        k = rms_head_norm(p["knorm"], k)
+    if cfg.rope_theta > 0 and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+
+    q = q.reshape(B, S, kvg, r, hd)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal, window, q0, k0, chunk=1024,
+                      softmax_scale=None, ax: AxisCtx = UNSHARDED):
+    """Online-softmax attention, scanning KV in blocks (no SxS in HLO).
+
+    q: (B,Sq,KVg,R,hd); k,v: (B,Sk,KVg,hd). q0/k0: absolute position of the
+    first query / key (ints or traced scalars). window>0 = sliding window.
+    """
+    B, Sq, KVg, R, hd = q.shape
+    Sk = k.shape[1]
+    scale = softmax_scale or (1.0 / math.sqrt(hd))
+    qf = q.astype(jnp.float32) * scale
+    chunk = min(chunk, Sk)
+    n_chunks = (Sk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KVg, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KVg, hd).transpose(1, 0, 2, 3, 4)
+
+    qpos = q0 + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        kpos = k0 + ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqgrh,bkgh->bgrqk", qf, kb.astype(jnp.float32))
+        mask = jnp.ones((Sq, chunk), bool)
+        mask &= (kpos < k0 + Sk)[None, :]                      # kv padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window and window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, -1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgh->bgrqh", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = ax.vary(jnp.full((B, KVg, R, Sq), -1e30, jnp.float32))
+    l0 = ax.vary(jnp.zeros((B, KVg, R, Sq), jnp.float32))
+    a0 = ax.vary(jnp.zeros((B, KVg, R, Sq, hd), jnp.float32))
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,KVg,R,Sq,hd) -> (B,Sq,KVg*R,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, KVg * R, hd)
+    return out.astype(q.dtype)
+
+
+def attention_block(cfg: ModelConfig, p, x, ax: AxisCtx, *, positions,
+                    x_kv=None, kv_positions=None, causal=None, window=0):
+    """Full attention for train/prefill. Returns (B,S,d) after o-proj psum."""
+    causal = cfg.causal if causal is None else causal
+    x_kv = x if x_kv is None else x_kv
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(cfg, p, x, x_kv, ax, positions, kv_positions)
+    out = chunked_attention(q, k, v, causal=causal, window=window, q0=0, k0=0,
+                            ax=ax)
+    B, S = out.shape[0], out.shape[1]
+    wo = ax.all_gather_param(p["wo"], 1)
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(B, S, -1), wo)
+    return ax.psum_tp(y)
+
+
+# -- decode: sequence-sharded KV cache + flash-decoding merge ---------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch_local, seq_local, dtype):
+    """dtype=int8 -> quantized cache with per-(token, head) fp scales
+    (§Perf decode iteration 3: halves the dominant HBM term)."""
+    hd = cfg.hd
+    cache = {
+        "k": jnp.zeros((batch_local, seq_local, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch_local, seq_local, cfg.n_kv_heads, hd), dtype),
+    }
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch_local, seq_local, cfg.n_kv_heads),
+                                     jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((batch_local, seq_local, cfg.n_kv_heads),
+                                     jnp.bfloat16)
+    return cache
+
+
+def _quantize_kv(x):
+    """x: (B,1,KV,hd) -> (int8 values, (B,1,KV) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def decode_attention_block(cfg: ModelConfig, p, x, cache, pos, ax: AxisCtx,
+                           *, window=0, inject=True, kv_len=None,
+                           ring_window=0):
+    """One-token decode against a seq-sharded cache.
+
+    x: (B,1,d); cache k/v: (B, S_loc, KV, hd) — the seq dim is sharded over
+    the model axis; every device attends its chunk for ALL heads (q/k/v are
+    all-gathered over TP — a few KB), partial softmax stats are psum-merged
+    (flash-decoding), and the o-projection returns to the TP layout.
+    pos: scalar int32 — current absolute position (cache filled to pos).
+    inject=False: cross-attention decode (static cache, e.g. whisper
+    encoder outputs); ``kv_len`` then gives the number of valid cache slots.
+    Returns (y (B,1,d), new_cache).
+    """
+    q, k_new, v_new = _project_qkv(
+        cfg, p, x, x, ax,
+        positions=jnp.full((x.shape[0], 1), pos, jnp.int32),
+        kv_positions=jnp.full((x.shape[0], 1), pos, jnp.int32))
+    B = x.shape[0]
+    hd = cfg.hd
+    # gather all heads on every device (tiny tensors: one token)
+    if ax.tp is not None:
+        q = lax.all_gather(q, ax.tp, axis=2, tiled=True)       # (B,1,KV?,R,hd)
+        if inject:
+            if cfg.n_kv_heads < ax.tp_size:
+                # each group computed the same kv head; take one copy per head
+                group = ax.tp_size // cfg.n_kv_heads
+                kg = lax.all_gather(k_new, ax.tp, axis=2, tiled=True)
+                vg = lax.all_gather(v_new, ax.tp, axis=2, tiled=True)
+                k_new = kg[:, :, ::group]
+                v_new = vg[:, :, ::group]
+            else:
+                k_new = lax.all_gather(k_new, ax.tp, axis=2, tiled=True)
+                v_new = lax.all_gather(v_new, ax.tp, axis=2, tiled=True)
+    KV = cfg.n_kv_heads
+    Hp = q.shape[2] * q.shape[3]
+    q = q.reshape(B, 1, KV, Hp // KV, hd)
+
+    S_loc = cache["k"].shape[1]
+    tp_idx = ax.tp_index()
+    quantized = cache["k"].dtype == jnp.int8
+    new_scales = {}
+    if inject:
+        # cache slot owner: device pos // S_loc; masked update everywhere.
+        # ring_window>0: the cache is a ring buffer of that many slots
+        # (sliding-window long-context decode), slot = pos % window.
+        wpos = (pos % ring_window) if ring_window else pos
+        slot = wpos - tp_idx * S_loc
+        in_range = (slot >= 0) & (slot < S_loc)
+        slot_c = jnp.clip(slot, 0, S_loc - 1)
+
+        def upd(c, new):
+            newc = lax.dynamic_update_slice_in_dim(
+                c, new.astype(c.dtype), slot_c, axis=1)
+            return jnp.where(in_range, newc, c)
+
+        if quantized:
+            kq, ks = _quantize_kv(k_new)
+            vq, vs = _quantize_kv(v_new)
+            k_cache = upd(cache["k"], kq)
+            v_cache = upd(cache["v"], vq)
+            new_scales["k_scale"] = upd(cache["k_scale"], ks)
+            new_scales["v_scale"] = upd(cache["v_scale"], vs)
+        else:
+            k_cache = upd(cache["k"], k_new)
+            v_cache = upd(cache["v"], v_new)
+    else:
+        k_cache, v_cache = cache["k"], cache["v"]
+    if quantized:
+        k_eff = _dequantize_kv(k_cache, new_scales.get("k_scale",
+                                                       cache["k_scale"]))
+        v_eff = _dequantize_kv(v_cache, new_scales.get("v_scale",
+                                                       cache["v_scale"]))
+    else:
+        k_eff, v_eff = k_cache, v_cache
+
+    # local partial attention over my seq chunk
+    scale = 1.0 / math.sqrt(hd)
+    kpos = tp_idx * S_loc + jnp.arange(S_loc)
+    if inject:
+        if ring_window:
+            # ring entries are by construction the last `window` tokens;
+            # before the first wrap only slots <= pos are populated
+            valid = (kpos <= pos) | (pos >= ring_window)
+        else:
+            valid = kpos <= pos
+            if window and window > 0:
+                valid &= kpos > pos - window
+    else:
+        valid = kpos < (kv_len if kv_len is not None else S_loc * max(ax.tp_size, 1))
+    qf = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qf, k_eff.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    m_loc = jnp.max(s, -1)
+    p_ = jnp.exp(s - m_loc[..., None])
+    l_loc = jnp.sum(p_, -1)
+    o_loc = jnp.einsum("bgrqk,bkgh->bgrqh", p_, v_eff.astype(jnp.float32))
+    if ax.tp is not None:
+        m = lax.pmax(m_loc, ax.tp)
+        corr = jnp.exp(m_loc - m)
+        l = lax.psum(l_loc * corr, ax.tp)
+        o = lax.psum(o_loc * corr[..., None], ax.tp)
+    else:
+        l, o = l_loc, o_loc
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, Hp, hd)       # all heads
+
+    # o-proj: keep TP layout — each device uses only its head slice
+    if _use_ws(ax):
+        h_loc = p["wo"].shape[0] // hd
+        o = lax.dynamic_slice_in_dim(o, tp_idx * h_loc, h_loc, axis=2)
+        y = ws_rowshard_matmul(o.reshape(B, 1, -1).astype(x.dtype),
+                               p["wo"], ax)
+    else:
+        wo = ax.all_gather_param(p["wo"], 1)
+        h_loc = wo.shape[0] // hd
+        if ax.tp is not None:
+            o = lax.dynamic_slice_in_dim(o, tp_idx * h_loc, h_loc, axis=2)
+        y = jnp.einsum("bsf,fd->bsd", o.reshape(B, 1, -1).astype(x.dtype), wo)
+        y = ax.psum_tp(y)
+    if not inject:
+        return y, cache
+    new_cache = {"k": k_cache, "v": v_cache, **new_scales}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wi": _dense_init(keys[0], (d, f), dt),
+            "wg": _dense_init(keys[1], (d, f), dt),
+            "wo": _dense_init(keys[2], (f, d), dt),
+        }
+    return {
+        "wi": _dense_init(keys[0], (d, f), dt),
+        "wo": _dense_init(keys[2], (f, d), dt),
+    }
+
+
+def mlp_block(cfg: ModelConfig, p, x, ax: AxisCtx):
+    if _use_ws(ax):
+        # §Perf iteration 2: single gather/psum for wi+wg (concatenated)
+        if cfg.act == "swiglu":
+            wig = jnp.concatenate([p["wi"], p["wg"]], axis=1)
+            hg = ws_colshard_matmul(x, wig, ax)
+            f_loc = p["wi"].shape[1]
+            h = jax.nn.silu(hg[..., f_loc:]) * hg[..., :f_loc]
+        else:
+            h = jax.nn.gelu(ws_colshard_matmul(x, p["wi"], ax))
+        return ws_rowshard_matmul(h, p["wo"], ax)
+    wi = ax.all_gather_param(p["wi"], 0)
+    wo = ax.all_gather_param(p["wo"], 1)
+    h = jnp.einsum("bsd,df->bsf", x, wi)
+    if cfg.act == "swiglu":
+        wg = ax.all_gather_param(p["wg"], 0)
+        g = jnp.einsum("bsd,df->bsf", x, wg)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("bsf,fd->bsd", h, wo)
+    return ax.psum_tp(y)

@@ -1,0 +1,481 @@
+"""Model assembly for all assigned architecture families.
+
+Parameters are nested dicts with repeated layers *stacked* on a leading L dim
+(one ``lax.scan`` per trunk — crucial for compile time at 126 layers).
+The same forward code runs unsharded (CPU) and inside shard_map (TP).
+
+Families:
+  dense / moe / vlm : decoder-only LM (vlm = stub vision tokens prepended)
+  ssm (rwkv6)       : attention-free time-mix/channel-mix stack
+  hybrid (zamba2)   : groups of mamba2 layers + one weight-shared attn block
+  encdec (whisper)  : stub-frame encoder + causal decoder w/ cross-attention
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.common.axes import AxisCtx, UNSHARDED
+from repro.configs.base import ModelConfig
+
+# REPRO_SCAN_UNROLL=N unrolls the layer scans (validation of the analytic
+# roofline vs trip-count-erased while-loops in HLO; see EXPERIMENTS.md).
+import os as _os
+_SCAN_UNROLL = int(_os.environ.get("REPRO_SCAN_UNROLL", "1"))
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rwkv as RWKV
+from repro.models import ssm as SSM
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _dense_layer_init(cfg: ModelConfig, tp: int):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        block = {
+            "ln1": L.norm_params(cfg, cfg.d_model),
+            "attn": L.attention_params(k1, cfg, tp),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+        }
+        if cfg.family == "moe" or (cfg.n_experts and cfg.family != "hybrid"):
+            block["moe"] = MOE.moe_params(k2, cfg, cfg.n_experts)
+        else:
+            block["mlp"] = L.mlp_params(k2, cfg)
+        return block
+    return init
+
+
+def _rwkv_layer_init(cfg: ModelConfig):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_params(cfg, cfg.d_model),
+            "time": RWKV.rwkv_time_params(k1, cfg),
+            "ln2": L.norm_params(cfg, cfg.d_model),
+            "chan": RWKV.rwkv_channel_params(k2, cfg),
+        }
+    return init
+
+
+def _mamba_layer_init(cfg: ModelConfig):
+    def init(key):
+        return {"ln": L.norm_params(cfg, cfg.d_model),
+                "mamba": SSM.mamba_params(key, cfg)}
+    return init
+
+
+def init_params(cfg: ModelConfig, key, tp: int = 1):
+    """Global (unsharded) parameter pytree. The dry-run never calls this with
+    real memory — it uses ``jax.eval_shape`` around it."""
+    keys = jax.random.split(key, 12)
+    vp = cfg.padded_vocab()
+    params = {
+        "embed": L.embed_params(keys[0], cfg, vp),
+        "final_norm": L.norm_params(cfg, cfg.d_model),
+        "head": L.head_params(keys[1], cfg, vp),
+    }
+    n_ad = cfg.n_adaptive_layers
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_trunk = cfg.n_layers - n_ad
+        params["layers"] = _stack_init(_dense_layer_init(cfg, tp), keys[2], n_trunk)
+        params["adaptive_layers"] = _stack_init(_dense_layer_init(cfg, tp), keys[3], n_ad)
+    elif cfg.family == "ssm":
+        n_trunk = cfg.n_layers - n_ad
+        params["layers"] = _stack_init(_rwkv_layer_init(cfg), keys[2], n_trunk)
+        params["adaptive_layers"] = _stack_init(_rwkv_layer_init(cfg), keys[3], n_ad)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack_init(_mamba_layer_init(cfg), keys[2], cfg.n_layers)
+        # the weight-shared attention block is the adaptive part
+        params["shared_attn"] = _dense_layer_init(cfg, tp)(keys[3])
+    elif cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, causal=False)
+        def enc_init(key):
+            k1, k2 = jax.random.split(key)
+            return {
+                "ln1": L.norm_params(cfg, cfg.d_model),
+                "attn": L.attention_params(k1, enc_cfg, tp),
+                "ln2": L.norm_params(cfg, cfg.d_model),
+                "mlp": L.mlp_params(k2, cfg),
+            }
+        def dec_init(key):
+            k1, k2, k3 = jax.random.split(key, 3)
+            return {
+                "ln1": L.norm_params(cfg, cfg.d_model),
+                "attn": L.attention_params(k1, cfg, tp),
+                "lnx": L.norm_params(cfg, cfg.d_model),
+                "cross": L.attention_params(k2, cfg, tp),
+                "ln2": L.norm_params(cfg, cfg.d_model),
+                "mlp": L.mlp_params(k3, cfg),
+            }
+        params["enc_layers"] = _stack_init(enc_init, keys[2], cfg.n_enc_layers)
+        params["enc_norm"] = L.norm_params(cfg, cfg.d_model)
+        n_trunk = cfg.n_layers - n_ad
+        params["layers"] = _stack_init(dec_init, keys[4], n_trunk)
+        params["adaptive_layers"] = _stack_init(dec_init, keys[5], n_ad)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_apply(cfg: ModelConfig, lp, x, ax: AxisCtx, positions, window=0):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    x = x + L.attention_block(cfg, lp["attn"], h, ax, positions=positions,
+                              window=window)
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    if "moe" in lp:
+        y, aux = MOE.moe_block(cfg, lp["moe"], h, ax)
+        return x + y, aux
+    return x + L.mlp_block(cfg, lp["mlp"], h, ax), jnp.zeros((), jnp.float32)
+
+
+def _rwkv_layer_apply(cfg: ModelConfig, lp, x, ax: AxisCtx, state=None):
+    h = L.apply_norm(cfg, lp["ln1"], x)
+    y, S_new, last_att = RWKV.rwkv_time_mix(cfg, lp["time"], h, ax, state)
+    x = x + y
+    h = L.apply_norm(cfg, lp["ln2"], x)
+    y, last_ffn = RWKV.rwkv_channel_mix(cfg, lp["chan"], h, ax, state)
+    x = x + y
+    new_state = None
+    if state is not None:
+        new_state = {"S": S_new, "x_att": last_att, "x_ffn": last_ffn}
+    return x, new_state
+
+
+def _mamba_layer_apply(cfg: ModelConfig, lp, x, ax: AxisCtx, state=None):
+    h = L.apply_norm(cfg, lp["ln"], x)
+    y, new_state = SSM.mamba_block(cfg, lp["mamba"], h, ax, state)
+    return x + y, new_state
+
+
+def _scan_layers(apply_fn, x, stacked, *extra):
+    def body(carry, lp):
+        y, aux = apply_fn(carry, lp)
+        return y, aux
+    x, auxs = lax.scan(lambda c, lp: apply_fn(c, lp), x, stacked)
+    return x, auxs
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill): returns final hidden states + moe aux
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch, ax: AxisCtx):
+    tokens = batch["tokens"]
+    x = L.embed_lookup(cfg, params["embed"], tokens, ax)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    if cfg.rope_theta <= 0:  # learned/sinusoidal positions (whisper decoder)
+        S = x.shape[1]
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, ax: AxisCtx = UNSHARDED, *, window=0):
+    """Trunk + adaptive layers; returns (hidden (B,S,d), moe_aux)."""
+    x = _embed_inputs(cfg, params, batch, ax)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        fn = lambda c, lp: _dense_layer_apply(cfg, lp, c, ax, positions, window)
+        x, auxs = lax.scan(fn, x, params["layers"], unroll=_SCAN_UNROLL)
+        aux_total += jnp.sum(auxs)
+        x, auxs = lax.scan(fn, x, params["adaptive_layers"])
+        aux_total += jnp.sum(auxs)
+
+    elif cfg.family == "ssm":
+        fn = lambda c, lp: _rwkv_layer_apply(cfg, lp, c, ax)
+        x, _ = lax.scan(lambda c, lp: (fn(c, lp)[0], 0.0), x, params["layers"])
+        x, _ = lax.scan(lambda c, lp: (fn(c, lp)[0], 0.0), x,
+                        params["adaptive_layers"])
+
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+
+        def group_fn(c, glp):
+            c, _ = lax.scan(
+                lambda cc, lp: (_mamba_layer_apply(cfg, lp, cc, ax)[0], 0.0),
+                c, glp)
+            c, aux = _dense_layer_apply(cfg, shared, c, ax, positions)
+            return c, aux
+        x, auxs = lax.scan(group_fn, x, stacked)
+        aux_total += jnp.sum(auxs)
+
+    elif cfg.family == "encdec":
+        frames = batch["frames"]
+        enc = frames.astype(x.dtype) + L.sinusoidal_positions(
+            frames.shape[1], cfg.d_model).astype(x.dtype)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), enc.shape[:2])
+
+        def enc_fn(c, lp):
+            h = L.apply_norm(cfg, lp["ln1"], c)
+            c = c + L.attention_block(cfg, lp["attn"], h, ax,
+                                      positions=enc_pos, causal=False)
+            h = L.apply_norm(cfg, lp["ln2"], c)
+            return c + L.mlp_block(cfg, lp["mlp"], h, ax), 0.0
+        enc, _ = lax.scan(enc_fn, enc, params["enc_layers"])
+        enc = L.apply_norm(cfg, params["enc_norm"], enc)
+
+        def dec_fn(c, lp):
+            h = L.apply_norm(cfg, lp["ln1"], c)
+            c = c + L.attention_block(cfg, lp["attn"], h, ax,
+                                      positions=positions, window=window)
+            h = L.apply_norm(cfg, lp["lnx"], c)
+            c = c + L.attention_block(cfg, lp["cross"], h, ax,
+                                      positions=positions, x_kv=enc,
+                                      kv_positions=enc_pos, causal=False)
+            h = L.apply_norm(cfg, lp["ln2"], c)
+            return c + L.mlp_block(cfg, lp["mlp"], h, ax), 0.0
+        x, _ = lax.scan(dec_fn, x, params["layers"])
+        x, _ = lax.scan(dec_fn, x, params["adaptive_layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ax: AxisCtx = UNSHARDED, *,
+            window=0, aux_weight=0.01):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    x, aux = forward(cfg, params, batch, ax, window=window)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_vision_tokens:]
+    loss = L.lm_head_loss(cfg, params["head"], x, batch["labels"], ax)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against cache/state)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_local: int, seq_local: int, *,
+               enc_seq_local: int = 0, dtype=jnp.bfloat16, tp: int = 1):
+    """Decode cache pytree (local shapes; seq dim sharded over TP)."""
+    n_ad = cfg.n_adaptive_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_trunk = cfg.n_layers - n_ad
+        def mk(n):
+            c = {"k": jnp.zeros((n, batch_local, seq_local, cfg.n_kv_heads,
+                                 cfg.hd), dtype),
+                 "v": jnp.zeros((n, batch_local, seq_local, cfg.n_kv_heads,
+                                 cfg.hd), dtype)}
+            if dtype == jnp.int8:   # §Perf decode iteration 3
+                c["k_scale"] = jnp.zeros(
+                    (n, batch_local, seq_local, cfg.n_kv_heads), jnp.bfloat16)
+                c["v_scale"] = jnp.zeros(
+                    (n, batch_local, seq_local, cfg.n_kv_heads), jnp.bfloat16)
+            return c
+        return {"trunk": mk(n_trunk), "adaptive": mk(n_ad)}
+    if cfg.family == "ssm":
+        nh_loc = (cfg.d_model // cfg.rwkv_head_size) // tp
+        mk = lambda n: {
+            "S": jnp.zeros((n, batch_local, nh_loc, cfg.rwkv_head_size,
+                            cfg.rwkv_head_size), jnp.float32),
+            "x_att": jnp.zeros((n, batch_local, cfg.d_model), dtype),
+            "x_ffn": jnp.zeros((n, batch_local, cfg.d_model), dtype)}
+        return {"trunk": mk(cfg.n_layers - n_ad), "adaptive": mk(n_ad)}
+    if cfg.family == "hybrid":
+        di_loc = cfg.d_inner // tp
+        nh_loc = di_loc // cfg.ssm_head_dim
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "mamba": {
+                "h": jnp.zeros((cfg.n_layers, batch_local, nh_loc,
+                                cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch_local, cfg.ssm_conv - 1,
+                                   di_loc), dtype)},
+            "attn": {
+                "k": jnp.zeros((n_groups, batch_local, seq_local,
+                                cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((n_groups, batch_local, seq_local,
+                                cfg.n_kv_heads, cfg.hd), dtype)},
+        }
+    if cfg.family == "encdec":
+        n_trunk = cfg.n_layers - n_ad
+        mk_self = lambda n: {
+            "k": jnp.zeros((n, batch_local, seq_local, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((n, batch_local, seq_local, cfg.n_kv_heads, cfg.hd), dtype)}
+        mk_cross = lambda n: {
+            "k": jnp.zeros((n, batch_local, enc_seq_local, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((n, batch_local, enc_seq_local, cfg.n_kv_heads, cfg.hd), dtype)}
+        return {"trunk": mk_self(n_trunk), "adaptive": mk_self(n_ad),
+                "cross_trunk": mk_cross(n_trunk), "cross_adaptive": mk_cross(n_ad)}
+    raise ValueError(cfg.family)
+
+
+def prefill_cross_cache(cfg: ModelConfig, params, frames, cache,
+                        ax: AxisCtx = UNSHARDED):
+    """Whisper serving: run the encoder once and fill the cross-attention
+    k/v caches of every decoder layer. frames: (B, enc_seq, d_model)."""
+    enc = frames + L.sinusoidal_positions(
+        frames.shape[1], cfg.d_model).astype(frames.dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1]), enc.shape[:2])
+
+    def enc_fn(c, lp):
+        h = L.apply_norm(cfg, lp["ln1"], c)
+        c = c + L.attention_block(cfg, lp["attn"], h, ax,
+                                  positions=enc_pos, causal=False)
+        h = L.apply_norm(cfg, lp["ln2"], c)
+        return c + L.mlp_block(cfg, lp["mlp"], h, ax), 0.0
+
+    enc, _ = lax.scan(enc_fn, enc, params["enc_layers"])
+    enc = L.apply_norm(cfg, params["enc_norm"], enc)
+
+    def fill(lp_stack, cross):
+        def one(_, inp):
+            lp, cc = inp
+            _, k, v = L._project_qkv(cfg, lp["cross"], enc, enc, ax,
+                                     positions=None, kv_positions=None)
+            pad = cc["k"].shape[1] - k.shape[1]
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                cc["k"].dtype)
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                cc["v"].dtype)
+            return 0.0, {"k": kp, "v": vp}
+        _, filled = lax.scan(one, 0.0, (lp_stack, cross))
+        return filled
+
+    new_cache = dict(cache)
+    new_cache["cross_trunk"] = fill(params["layers"], cache["cross_trunk"])
+    new_cache["cross_adaptive"] = fill(params["adaptive_layers"],
+                                       cache["cross_adaptive"])
+    return new_cache, enc
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos,
+                ax: AxisCtx = UNSHARDED, *, window=0, ring=False,
+                enc_len=None):
+    """One greedy decode step. token: (B,1) int32, pos: scalar int32.
+
+    Returns (next_token (B,1) int32, new_cache). ``ring=True`` treats the
+    attention caches as ring buffers of size ``window`` (long_500k).
+    """
+    x = L.embed_lookup(cfg, params["embed"], token, ax)
+    if cfg.rope_theta <= 0:
+        B = x.shape[0]
+        # position encoding for a single absolute position
+        d = cfg.d_model
+        posenc = L.sinusoidal_positions(1, d, offset=pos).astype(x.dtype)
+        x = x + posenc
+    if ax.fsdp:
+        # FSDP weight gathers make every layer output formally data-varying;
+        # the layer-scan carry must enter with matching vma type.
+        x = ax.vary_dp(x)
+
+    ring_w = window if ring else 0
+
+    def attn_dec(lp, c, xx, cache_kv, extra_window=0):
+        h = L.apply_norm(cfg, lp["ln1"], xx)
+        y, new_kv = L.decode_attention_block(
+            cfg, lp["attn"], h, cache_kv, pos, ax,
+            window=(0 if ring else window), ring_window=ring_w, inject=True)
+        return xx + y, new_kv
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def layer_dec(c, inp):
+            lp, kv = inp
+            xx, new_kv = attn_dec(lp, None, c, kv)
+            h = L.apply_norm(cfg, lp["ln2"], xx)
+            if "moe" in lp:
+                y, _ = MOE.moe_block(cfg, lp["moe"], h, ax)
+            else:
+                y = L.mlp_block(cfg, lp["mlp"], h, ax)
+            return xx + y, new_kv
+        x, new_trunk = lax.scan(layer_dec, x, (params["layers"], cache["trunk"]))
+        x, new_ad = lax.scan(layer_dec, x, (params["adaptive_layers"], cache["adaptive"]))
+        new_cache = {"trunk": new_trunk, "adaptive": new_ad}
+
+    elif cfg.family == "ssm":
+        def layer_dec(c, inp):
+            lp, st = inp
+            y, new_st = _rwkv_layer_apply(cfg, lp, c, ax, st)
+            return y, new_st
+        x, new_trunk = lax.scan(layer_dec, x, (params["layers"], cache["trunk"]))
+        x, new_ad = lax.scan(layer_dec, x, (params["adaptive_layers"], cache["adaptive"]))
+        new_cache = {"trunk": new_trunk, "adaptive": new_ad}
+
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        mcache = cache["mamba"]
+        g_params = jax.tree.map(
+            lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        g_mcache = jax.tree.map(
+            lambda a: a.reshape((n_groups, cfg.attn_every) + a.shape[1:]), mcache)
+        shared = params["shared_attn"]
+
+        def group_dec(c, inp):
+            glp, gmc, kv = inp
+            def m_dec(cc, minp):
+                lp, st = minp
+                return _mamba_layer_apply(cfg, lp, cc, ax, st)
+            c, new_mc = lax.scan(m_dec, c, (glp, gmc))
+            h = L.apply_norm(cfg, shared["ln1"], c)
+            y, new_kv = L.decode_attention_block(
+                cfg, shared["attn"], h, kv, pos, ax,
+                window=(0 if ring else window), ring_window=ring_w)
+            c = c + y
+            h = L.apply_norm(cfg, shared["ln2"], c)
+            c = c + L.mlp_block(cfg, shared["mlp"], h, ax)
+            return c, (new_mc, new_kv)
+        x, (new_gmc, new_kv) = lax.scan(
+            group_dec, x, (g_params, g_mcache, cache["attn"]))
+        new_mcache = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_gmc)
+        new_cache = {"mamba": new_mcache, "attn": new_kv}
+
+    elif cfg.family == "encdec":
+        def layer_dec(c, inp):
+            lp, kv, xkv = inp
+            xx, new_kv = attn_dec(lp, None, c, kv)
+            h = L.apply_norm(cfg, lp["lnx"], xx)
+            y, _ = L.decode_attention_block(
+                cfg, lp["cross"], h, xkv, pos, ax, inject=False,
+                kv_len=enc_len)
+            xx = xx + y
+            h = L.apply_norm(cfg, lp["ln2"], xx)
+            return xx + L.mlp_block(cfg, lp["mlp"], h, ax), new_kv
+        x, new_trunk = lax.scan(
+            layer_dec, x, (params["layers"], cache["trunk"], cache["cross_trunk"]))
+        x, new_ad = lax.scan(
+            layer_dec, x,
+            (params["adaptive_layers"], cache["adaptive"], cache["cross_adaptive"]))
+        new_cache = {"trunk": new_trunk, "adaptive": new_ad,
+                     "cross_trunk": cache["cross_trunk"],
+                     "cross_adaptive": cache["cross_adaptive"]}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    next_tok, _ = L.lm_head_logits(cfg, params["head"], x, ax)
+    return next_tok.astype(jnp.int32), new_cache

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Design (TPU-native, see DESIGN.md §4): activations entering the FFN are
+replicated within a model row (post-attention psum), experts are sharded
+E/TP per device. Each device gathers the tokens routed to *its* experts via a
+sort-based capacity dispatch (gather indices — never a one-hot dispatch
+tensor), computes them, scatter-adds into its partial output, and the usual
+MLP ``psum`` over the model axis combines expert contributions. The only MoE
+communication is therefore the psum the dense MLP already pays.
+
+Capacity: C = ceil(T * top_k / E * capacity_factor); overflow tokens are
+dropped (their combine weight never lands), standard switch-style.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.axes import AxisCtx
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, mlp_params, mlp_block
+
+CAPACITY_FACTOR = 1.25
+
+# §Perf baseline toggle: REPRO_UNFUSED_DENSE=1 restores the pre-hillclimb
+# arctic layout (separate dense-residual all-reduce; 3 ARs/layer).
+import os as _os
+_UNFUSED_DENSE = bool(int(_os.environ.get("REPRO_UNFUSED_DENSE", "0")))
+
+
+def moe_params(key, cfg: ModelConfig, experts_local: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(keys[0], (d, cfg.n_experts), jnp.float32, scale=0.02),
+        "wi": _dense_init(keys[1], (experts_local, d, f), dt),
+        "wg": _dense_init(keys[2], (experts_local, d, f), dt),
+        "wo": _dense_init(keys[3], (experts_local, f, d), dt),
+    }
+    if cfg.dense_residual:
+        dcfg = dataclasses.replace(cfg, d_ff=cfg.dense_ff or cfg.d_ff)
+        p["dense"] = mlp_params(keys[4], dcfg)
+    return p
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * CAPACITY_FACTOR)
+    return max(8, ((c + 127) // 128) * 128)
+
+
+def moe_block(cfg: ModelConfig, p, x, ax: AxisCtx):
+    """x: (B,S,d) replicated over TP within a data row. Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E = cfg.n_experts
+    k = cfg.top_k
+    xf = x.reshape(T, d)
+
+    # ---- routing (fp32, replicated) ----
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = lax.top_k(probs, k)                  # (T,k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (switch-style; counts via scatter-add,
+    # never a (T*k, E) one-hot)
+    me = jnp.mean(probs, 0)                                    # (E,)
+    ce_counts = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0)
+    ce = ce_counts / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch ----
+    C = expert_capacity(cfg, T)
+    ef = gate_idx.reshape(T * k)                               # expert per slot
+    wf = gate_vals.reshape(T * k)
+    tok = jnp.repeat(jnp.arange(T), k)                         # token per slot
+
+    order = jnp.argsort(ef)                                    # stable
+    ef_s, tok_s, wf_s = ef[order], tok[order], wf[order]
+    # rank of each slot within its expert segment
+    seg_start = jnp.searchsorted(ef_s, jnp.arange(E))          # (E,)
+    rank = jnp.arange(T * k) - seg_start[ef_s]
+
+    e_loc = p["wi"].shape[0]
+    e_off = ax.tp_index() * e_loc
+    local = (ef_s >= e_off) & (ef_s < e_off + e_loc) & (rank < C)
+    buf_pos = jnp.where(local, (ef_s - e_off) * C + rank, e_loc * C)
+
+    idx_buf = jnp.full((e_loc * C + 1,), T, jnp.int32).at[buf_pos].set(
+        tok_s.astype(jnp.int32), mode="drop")[: e_loc * C]
+    w_buf = jnp.zeros((e_loc * C + 1,), jnp.float32).at[buf_pos].set(
+        wf_s, mode="drop")[: e_loc * C]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], 0)
+    gathered = jnp.take(xpad, idx_buf, axis=0).reshape(e_loc, C, d)
+
+    # ---- expert computation (swiglu) ----
+    if ax.decode_ws and ax.fsdp and ax.dp:
+        # weight-stationary decode: expert weights stay FSDP-sharded on f;
+        # the f-partial contraction is psum'd over data (MBs, not GBs).
+        h = jnp.einsum("ecd,edf->ecf", gathered, p["wi"])
+        g = jnp.einsum("ecd,edf->ecf", gathered, p["wg"])
+        h = jax.nn.silu(g) * h
+        y = lax.psum(jnp.einsum("ecf,efd->ecd", h, p["wo"]), ax.dp)
+    else:
+        wi = ax.all_gather_param(p["wi"], 2)
+        wg = ax.all_gather_param(p["wg"], 2)
+        wo = ax.all_gather_param(p["wo"], 1)
+        h = jnp.einsum("ecd,edf->ecf", gathered, wi)
+        g = jnp.einsum("ecd,edf->ecf", gathered, wg)
+        h = jax.nn.silu(g) * h
+        y = jnp.einsum("ecf,efd->ecd", h, wo)
+    y = y * w_buf.reshape(e_loc, C, 1).astype(y.dtype)
+
+    # ---- combine: scatter-add back, single psum over the model axis ----
+    out = jnp.zeros((T + 1, d), y.dtype).at[idx_buf.reshape(-1)].add(
+        y.reshape(-1, d), mode="drop")[:T]
+    out = out.reshape(B, S, d)
+
+    if cfg.dense_residual:
+        dcfg = dataclasses.replace(cfg, d_ff=cfg.dense_ff or cfg.d_ff)
+        if (ax.decode_ws and ax.fsdp and ax.dp) or _UNFUSED_DENSE:
+            # decode ws path / §Perf baseline toggle: separate dense psum
+            out = ax.psum_tp(out) + mlp_block(dcfg, p["dense"], x, ax)
+        else:
+            # §Perf: the dense-residual partial sums ride the SAME psum as
+            # the expert combine (one AR per FFN instead of two — arctic
+            # was 3 ARs/layer, now 2). EXPERIMENTS.md §Perf iteration 1.
+            out = ax.psum_tp(out + _mlp_partial(dcfg, p["dense"], x, ax))
+    else:
+        out = ax.psum_tp(out)
+    return out, aux
+
+
+def _mlp_partial(cfg: ModelConfig, p, x, ax: AxisCtx):
+    """mlp_block WITHOUT the trailing psum (caller fuses it)."""
+    wi = ax.all_gather_param(p["wi"], 0)
+    wo = ax.all_gather_param(p["wo"], 1)
+    h = jnp.einsum("bsd,df->bsf", x, wi)
+    if cfg.act == "swiglu":
+        wg = ax.all_gather_param(p["wg"], 0)
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, wg)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, wo)

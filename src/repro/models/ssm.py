@@ -1,0 +1,129 @@
+"""Mamba2-style selective SSM block (Zamba2 trunk layer).
+
+TPU adaptation: channels (d_inner) and SSM heads are sharded over the
+``model`` axis; B/C projections (state dim, ngroups=1) are computed
+replicated (they are tiny). Time recurrence is a ``lax.scan`` over chunks —
+the state (B, nh, hd, ds) is the decode-time cache. The depthwise causal
+conv keeps a (k-1)-step tail as decode state.
+
+Simplifications vs the reference CUDA kernel (recorded in DESIGN.md): the
+conv is applied to x only (not B/C), ngroups=1, and the intra-chunk compute
+uses the sequential form rather than the block-decomposition of SSD — the
+recurrence math (h_t = exp(dt*A) h_{t-1} + dt*B_t x_t, y_t = C_t h_t + D x_t)
+is the paper-faithful part.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.axes import AxisCtx
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def mamba_params(key, cfg: ModelConfig, tp: int = 1):
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    di = cfg.d_inner                      # global inner dim
+    ds = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    keys = jax.random.split(key, 8)
+    return {
+        "w_zx": _dense_init(keys[0], (d, 2 * di), dt),     # [z, x] col-shard
+        "w_bc": _dense_init(keys[1], (d, 2 * ds), dt),     # replicated
+        "w_dt": _dense_init(keys[2], (d, nh), dt),         # col-shard (heads)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": _dense_init(keys[3], (cfg.ssm_conv, di), dt, scale=0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "norm": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(keys[4], (di, d), dt),        # row-shard -> psum
+    }
+
+
+def _causal_depthwise_conv(x, w, b, tail=None):
+    """x: (B,L,ci), w: (k,ci) depthwise. tail: (B,k-1,ci) decode state."""
+    k = w.shape[0]
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_tail = xp[:, -(k - 1):, :] if k > 1 else None
+    return out + b, new_tail
+
+
+def init_ssm_state(cfg: ModelConfig, batch, di_local, dtype=jnp.float32):
+    nh = di_local // cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di_local), dtype),
+    }
+
+
+def mamba_block(cfg: ModelConfig, p, x, ax: AxisCtx, state=None):
+    """x: (B,L,d). Returns (y (B,L,d), new_state). state!=None => decode.
+
+    Local shapes: w_zx col dim = 2*di_loc; heads nh_loc = di_loc/hd.
+    """
+    B, L, d = x.shape
+    hd = cfg.ssm_head_dim
+    ds = cfg.ssm_state
+
+    w_zx = ax.all_gather_param(p["w_zx"], 0)
+    w_dt = ax.all_gather_param(p["w_dt"], 0)
+    w_out = ax.all_gather_param(p["w_out"], 1)
+
+    zx = jnp.einsum("bld,dk->blk", x, w_zx)
+    di_loc = zx.shape[-1] // 2
+    z, xs = zx[..., :di_loc], zx[..., di_loc:]
+    bc = jnp.einsum("bld,dk->blk", x, p["w_bc"]).astype(jnp.float32)
+    Bp, Cp = bc[..., :ds], bc[..., ds:]
+    dt_r = jnp.einsum("bld,dh->blh", x, w_dt).astype(jnp.float32)
+
+    conv_tail = state["conv"] if state is not None else None
+    xs, new_tail = _causal_depthwise_conv(xs, p["conv_w"], p["conv_b"], conv_tail)
+    xs = jax.nn.silu(xs)
+
+    nh = di_loc // hd
+    xh = xs.reshape(B, L, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_r + p["dt_bias"])                   # (B,L,nh)
+    A = -jnp.exp(p["A_log"])                                    # (nh,)
+    decay = jnp.exp(dt * A)                                     # (B,L,nh)
+
+    h0 = (state["h"] if state is not None
+          else ax.vary(jnp.zeros((B, nh, hd, ds), jnp.float32)))
+
+    def step(h, inp):
+        x_t, b_t, c_t, dec_t, dt_t = inp
+        # h: (B,nh,hd,ds)
+        upd = (dt_t[..., None, None] * x_t[..., None]) * b_t[:, None, None, :]
+        h = dec_t[..., None, None] * h + upd
+        y = jnp.einsum("bhps,bs->bhp", h, c_t)
+        return h, y
+
+    xs_t = xh.transpose(1, 0, 2, 3)                             # (L,B,nh,hd)
+    b_t = Bp.transpose(1, 0, 2)
+    c_t = Cp.transpose(1, 0, 2)
+    dec_t = decay.transpose(1, 0, 2)
+    dt_t = dt.transpose(1, 0, 2)
+    hN, ys = lax.scan(step, h0, (xs_t, b_t, c_t, dec_t, dt_t))
+    y = ys.transpose(1, 0, 2, 3)                                # (B,L,nh,hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, L, di_loc)
+
+    # gated RMSNorm: di is TP-sharded, so the mean-square needs a psum
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    ss = ax.psum_tp(jnp.sum(jnp.square(yf), -1, keepdims=True))
+    ms = ss / (di_loc * ax.tp_size)
+    yf = yf * lax.rsqrt(ms + 1e-6) * p["norm"]
+    out = jnp.einsum("blk,kd->bld", yf.astype(x.dtype), w_out)
+    out = ax.psum_tp(out)
+
+    new_state = None
+    if state is not None:
+        new_state = {"h": hN, "conv": new_tail}
+    return out, new_state

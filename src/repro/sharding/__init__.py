@@ -1,0 +1,9 @@
+from repro.sharding.analysis import Roofline, parse_collectives
+from repro.sharding.analytic import analytic_roofline
+from repro.sharding.specs import (
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    param_spec,
+    tree_param_specs,
+)

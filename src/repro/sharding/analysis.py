@@ -1,0 +1,164 @@
+"""Compiled-artifact analysis: per-device bytes, HLO cost, and collective
+traffic parsed from the lowered/compiled HLO text (roofline §Roofline).
+
+collective_bytes is NOT in cost_analysis — we parse the (optimized when
+available) HLO and sum the bytes every collective moves per device, using
+ring-algorithm wire-byte formulas and the replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\[?(\d+)[,x](\d+)\]?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:  # iota form: replica_groups=[G,N]<=[...]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device wire bytes for each collective op in the HLO.
+
+    Ring formulas (size = result buffer bytes, g = group size):
+      all-gather:     result is gathered -> moves size*(g-1)/g
+      all-reduce:     2 * size * (g-1)/g
+      reduce-scatter: input = result*g   -> moves size*(g-1)  [input-relative]
+      all-to-all:     size * (g-1)/g
+      collective-permute: size
+    """
+    by_bytes: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    by_count: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        g = max(_group_size(line), 1)
+        if kind == "all-gather":
+            moved = size * (g - 1) // max(g, 1)
+        elif kind == "all-reduce":
+            moved = 2 * size * (g - 1) // max(g, 1)
+        elif kind == "reduce-scatter":
+            moved = size * (g - 1)
+        elif kind == "all-to-all":
+            moved = size * (g - 1) // max(g, 1)
+        else:
+            moved = size
+        by_bytes[kind] += moved
+        by_count[kind] += 1
+    return CollectiveStats(by_bytes, by_count)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 4          # v5e: ~4 usable ICI directions per chip (2D torus)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+    model_flops: float = 0.0       # analytic 6*N*D (global, all devices)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.n_devices
+        return (self.model_flops / total) if total else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """Theoretical-minimum model FLOPs: 2*N_active*D forward; training adds
+    backward ONLY over the FedSTIL-adaptive slice (frozen trunk!), i.e.
+    +4*N_adaptive*D. (Plain 6*N*D would be the full-fine-tune number.)"""
+    n_active = cfg.active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    if shape.mode == "train":
+        return (2.0 * n_active + 4.0 * cfg.adaptive_active_params()) * tokens
+    return 2.0 * n_active * tokens

@@ -1,0 +1,188 @@
+"""Sharding rules: map every parameter / batch / cache leaf to a
+PartitionSpec by its tree path (Megatron TP + optional FSDP over data).
+
+The model code (repro/models) consumes *local* shards inside shard_map and
+emits collectives via AxisCtx; these specs define the global layout the
+dry-run hands to jax.jit/shard_map.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# stacked-subtree prefixes (leading layer dim)
+_STACKED = ("layers", "adaptive_layers", "enc_layers")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(cfg: ModelConfig, path: str, shape, *, tp_axis="model",
+               fsdp_axis: Optional[str] = "data", tp_size: int = 16) -> P:
+    """PartitionSpec for one parameter leaf, identified by its path string.
+
+    The path may be prefixed arbitrarily (trainable/alpha/..., opt m/v, B) —
+    rules match on the trailing components.
+    """
+    fs = fsdp_axis if cfg.fsdp else None
+    stacked = any(s in path.split("/") for s in _STACKED)
+    kv_sharded = cfg.n_kv_heads >= tp_size  # else replicated + group-sliced
+
+    def lead(*spec):
+        return P(*( (None,) + spec if stacked else spec ))
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # ---- attention ----
+    if parent in ("attn", "cross"):
+        if name == "wq":
+            return lead(fs, tp_axis)
+        if name in ("wk", "wv"):
+            return lead(fs, tp_axis) if kv_sharded else lead(fs, None)
+        if name == "wo":
+            return lead(tp_axis, fs)
+        if name == "bq":
+            return lead(tp_axis)
+        if name in ("bk", "bv"):
+            return lead(tp_axis) if kv_sharded else lead(None)
+        if name in ("qnorm", "knorm"):
+            return lead(None)
+
+    # ---- dense mlp / moe dense residual ----
+    if parent in ("mlp", "dense"):
+        if name in ("wi", "wg"):
+            return lead(fs, tp_axis)
+        if name == "wo":
+            return lead(tp_axis, fs)
+
+    # ---- moe experts ----
+    if parent == "moe":
+        if name == "router":
+            return lead(None, None)
+        if name in ("wi", "wg"):                    # (E, d, f)
+            return lead(tp_axis, None, fs)
+        if name == "wo":                            # (E, f, d)
+            return lead(tp_axis, fs, None)
+    if "moe/dense" in path:
+        pass  # handled by parent == "dense"
+
+    # ---- mamba ----
+    if parent == "mamba":
+        if name in ("w_zx", "w_dt"):
+            return lead(fs, tp_axis)
+        if name == "w_bc":
+            return lead(fs, None)
+        if name in ("dt_bias", "A_log", "D", "conv_b", "norm"):
+            return lead(tp_axis)
+        if name == "conv_w":
+            return lead(None, tp_axis)
+        if name == "w_out":
+            return lead(tp_axis, fs)
+
+    # ---- rwkv time/channel mix ----
+    if parent == "time":
+        if name in ("wr", "wk", "wv", "wg"):
+            return lead(fs, tp_axis)
+        if name == "wo":
+            return lead(tp_axis, fs)
+        if name in ("u", "ln_scale", "ln_bias"):
+            return lead(tp_axis)
+        if name in ("mu", "w0", "Aw", "Bw"):
+            return lead(*([None] * (len(shape) - (1 if stacked else 0))))
+    if parent == "chan":
+        if name == "wk":
+            return lead(fs, tp_axis)
+        if name == "wv":
+            return lead(tp_axis, fs)
+        if name in ("wr", "mu"):
+            return lead(*([None] * (len(shape) - (1 if stacked else 0))))
+
+    # ---- embedding / head ----
+    if parent == "embed" and name == "table":
+        return P(tp_axis, None)
+    if parent == "head" and name == "w":
+        return P(None, tp_axis)
+
+    # ---- norms, scalars, anything else: replicated ----
+    return P(*([None] * len(shape)))
+
+
+def tree_param_specs(cfg: ModelConfig, tree, **kw):
+    """PartitionSpec pytree matching ``tree`` (of arrays/ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [param_spec(cfg, _path_str(path), leaf.shape, **kw)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(global_batch: int, dp: int, multi_pod: bool):
+    """Which axes the batch dim shards over (None if not divisible)."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+    total = dp * (2 if multi_pod else 1)
+    if global_batch % total == 0:
+        return axes if multi_pod else "data"
+    if global_batch % dp == 0:   # shard over data only
+        return "data"
+    return None                   # replicate (long_500k batch=1)
+
+
+def batch_specs(cfg: ModelConfig, batch_tree, global_batch: int, dp: int,
+                multi_pod: bool):
+    b = batch_axes(global_batch, dp, multi_pod)
+
+    def spec_for(path, leaf):
+        return P(*((b,) + (None,) * (len(leaf.shape) - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_tree)
+    specs = [spec_for(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, global_batch: int, dp: int,
+                multi_pod: bool, *, tp_axis="model"):
+    """Decode caches: (L, B, S, KV, hd) -> batch over data, SEQ over model
+    (flash-decoding layout); SSM states: heads/channels over model."""
+    b = batch_axes(global_batch, dp, multi_pod)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v"):            # (L, B, S, KV, hd)
+            return P(None, b, tp_axis, None, None)
+        if name in ("k_scale", "v_scale"):  # (L, B, S, KV)
+            return P(None, b, tp_axis, None)
+        if name == "h":                   # mamba (L, B, nh, hd, ds)
+            return P(None, b, tp_axis, None, None)
+        if name == "conv":                # (L, B, k-1, di)
+            return P(None, b, None, tp_axis)
+        if name == "S":                   # rwkv (L, B, nh, hd, hd)
+            return P(None, b, tp_axis, None, None)
+        if name in ("x_att", "x_ffn"):    # (L, B, d)
+            return P(None, b, None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [spec_for(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,14 @@
+from repro.train.metrics import LifelongTracker
+from repro.train.optimizer import (
+    adam,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    sgd,
+)
+from repro.train.trainer import (
+    TrainState,
+    init_train_state,
+    make_full_train_step,
+    make_train_step,
+)

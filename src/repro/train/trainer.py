@@ -1,0 +1,111 @@
+"""LM trainer for the assigned architectures (FedSTIL split: frozen trunk,
+adaptive last block + head with theta = B ⊙ alpha + A).
+
+This is the edge-client training step at architecture scale — the dry-run
+lowers exactly this function over the production mesh. On CPU it drives the
+reduced configs (smoke tests, quickstart, e2e driver).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.axes import AxisCtx, UNSHARDED
+from repro.configs.base import ModelConfig
+from repro.core.adaptive import combine, init_adaptive, merge_params, split_params
+from repro.models import lm
+from repro.train.optimizer import adam, apply_updates, clip_by_global_norm
+
+
+@dataclasses.dataclass
+class TrainState:
+    frozen: Any                # extraction-layer params (never updated)
+    B: Any                     # server-provided base for adaptive layers
+    trainable: Any             # {"alpha": ..., "A": ...}
+    opt_state: Any
+
+    def theta(self):
+        return combine(self.B, self.trainable["alpha"], self.trainable["A"])
+
+    def full_params(self):
+        return merge_params(self.frozen, self.theta())
+
+
+def init_train_state(cfg: ModelConfig, key, tp: int = 1,
+                     optimizer=None) -> TrainState:
+    params = lm.init_params(cfg, key, tp=tp)
+    frozen, adaptive = split_params(cfg, params)
+    ad = init_adaptive(adaptive)
+    opt = optimizer or adam(lr=1e-3, weight_decay=1e-5)
+    return TrainState(frozen=frozen, B=ad.B,
+                      trainable=ad.trainable(),
+                      opt_state=opt.init(ad.trainable()))
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None, ax: AxisCtx = UNSHARDED,
+                    *, window: int = 0, tie_lambda: float = 0.0):
+    """Returns train_step(frozen, B, trainable, opt_state, batch) ->
+    (trainable, opt_state, metrics). Grads flow only into (alpha, A):
+    the trunk is frozen (FedSTIL extraction layers) so backprop stops at the
+    adaptive block — the paper's edge-compute-saving property."""
+    opt = optimizer or adam(lr=1e-3, weight_decay=1e-5)
+
+    def train_step(frozen, B, trainable, opt_state, batch):
+        def lf(tr):
+            theta = combine(B, tr["alpha"], tr["A"])
+            params = merge_params(frozen, theta)
+            total, (ce, aux) = lm.loss_fn(cfg, params, batch, ax, window=window)
+            # global-batch mean INSIDE the differentiated function: grads of
+            # data-replicated params are auto-psum'd over the data axis by
+            # the shard_map transpose, so the mean must be taken here, not
+            # applied to the grads afterwards.
+            total = ax.pmean_dp(total)
+            reported = total
+            if tie_lambda:
+                # l1 over *local* shards: its gradient (elementwise sign) is
+                # correct under any sharding; the scalar itself is
+                # shard-varying, so it is excluded from reported metrics.
+                l1 = sum(jnp.sum(jnp.abs(a)) for a in jax.tree.leaves(tr["A"]))
+                total = total + tie_lambda * l1
+            return total, (reported, ax.pmean_dp(ce), ax.pmean_dp(aux))
+
+        (_, (loss, ce, aux)), grads = jax.value_and_grad(lf, has_aux=True)(trainable)
+        if ax.tp is None:
+            # grad leaves are TP-sharded on the mesh: a local global-norm
+            # would be wrong there, so clip only in the unsharded regime
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+        else:
+            gnorm = jnp.zeros(())
+        updates, opt_state = opt.update(grads, opt_state, trainable)
+        trainable = apply_updates(trainable, updates)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux, "grad_norm": gnorm}
+        return trainable, opt_state, metrics
+
+    return train_step
+
+
+def make_full_train_step(cfg: ModelConfig, optimizer=None,
+                         ax: AxisCtx = UNSHARDED, *, window: int = 0):
+    """Beyond-paper: full fine-tuning of every parameter (used by the e2e
+    ~100M driver and available via launch/train.py --full)."""
+    opt = optimizer or adam(lr=3e-4)
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            total, (ce, aux) = lm.loss_fn(cfg, p, batch, ax, window=window)
+            return ax.pmean_dp(total), (ax.pmean_dp(ce), aux)
+        (loss, (ce, aux)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if ax.tp is None:
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+        else:
+            gnorm = jnp.zeros(())
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "ce": ce, "grad_norm": gnorm}
+
+    return train_step

@@ -1,0 +1,94 @@
+"""Per-kernel allclose tests: Pallas (interpret=True on CPU) vs the pure-jnp
+oracle in repro.kernels.ref, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as REF
+from repro.kernels.adaptive_combine import adaptive_combine
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.kl_similarity import kl_similarity
+from repro.kernels.pairwise_dist import pairwise_dist
+from repro.kernels.relevance_aggregate import relevance_aggregate
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Sq,Sk,hd", [
+    (1, 2, 128, 128, 64),
+    (2, 1, 256, 256, 64),
+    (1, 2, 128, 256, 128),   # cross-ish (non-square, non-causal only)
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, H, Sq, Sk, hd, dtype, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires square here")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(k1, (B, H, Sq, hd), dtype)
+    k = _rand(k2, (B, H, Sk, hd), dtype)
+    v = _rand(k3, (B, H, Sk, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64,
+                          interpret=True)
+    ref = REF.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Q,G,D", [(64, 64, 32), (130, 70, 128), (8, 300, 64)])
+def test_pairwise_dist(Q, G, D, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    q = _rand(k1, (Q, D), dtype)
+    g = _rand(k2, (G, D), dtype)
+    out = pairwise_dist(q, g, q_block=64, g_block=64, interpret=True)
+    ref = REF.pairwise_dist_ref(q, g)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(64,), (33, 17), (8, 128, 9), (100000,)])
+def test_adaptive_combine(shape, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    b = _rand(k1, shape, dtype)
+    al = _rand(k2, shape, dtype)
+    a = _rand(k3, shape, dtype)
+    out = adaptive_combine(b, al, a, interpret=True)
+    ref = REF.adaptive_combine_ref(b, al, a)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,P", [(5, 1000), (8, 4096), (3, 257)])
+def test_relevance_aggregate(C, P, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    w = jax.nn.softmax(jax.random.normal(k1, (C, C)), -1)
+    th = _rand(k2, (C, P), dtype)
+    out = relevance_aggregate(w, th, p_block=512, interpret=True)
+    ref = REF.relevance_aggregate_ref(w, th)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("N,M,D", [(16, 16, 64), (40, 70, 128), (5, 5, 32)])
+def test_kl_similarity(N, M, D):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    a = jax.random.normal(k1, (N, D))
+    b = jax.random.normal(k2, (M, D))
+    out = kl_similarity(a, b, n_block=16, m_block=16, interpret=True)
+    ref = REF.kl_similarity_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-4)
+    # similarity of a row with itself is exactly 1
+    self_sim = kl_similarity(a, a, interpret=True)
+    np.testing.assert_allclose(np.diag(np.asarray(self_sim)), 1.0, atol=1e-5)

@@ -1,0 +1,36 @@
+"""Flash-attention backward kernel (custom_vjp, interpret mode) vs jax.grad
+of the jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention_bwd import flash_attention_vjp
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("B,H,S,hd", [(1, 2, 128, 64), (2, 1, 256, 32)])
+def test_flash_attention_grads(B, H, S, hd, causal):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(k1, (B, H, S, hd))
+    k = jax.random.normal(k2, (B, H, S, hd))
+    v = jax.random.normal(k3, (B, H, S, hd))
+    ct = jax.random.normal(k4, (B, H, S, hd))
+
+    def loss_pallas(q, k, v):
+        return jnp.sum(flash_attention_vjp(q, k, v, causal, 64, 64, True) * ct)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(REF.flash_attention_ref(q, k, v, causal=causal) * ct)
+
+    out_p = flash_attention_vjp(q, k, v, causal, 64, 64, True)
+    out_r = REF.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               atol=2e-5, rtol=2e-5)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip(("dq", "dk", "dv"), gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4, err_msg=name)

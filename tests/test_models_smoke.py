@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (2 layers, d_model<=512, <=4 experts) runs one forward/train
+step on CPU — output shapes asserted, no NaNs. Plus a decode-vs-forward
+consistency check (the KV-cache/state path must predict the same tokens as
+the teacher-forced forward pass)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, forward, init_cache, init_params, loss_fn
+from repro.models import layers as L
+from repro.train import init_train_state, make_train_step
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_shapes(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    x, aux = forward(cfg, params, batch)
+    B = batch["tokens"].shape[0]
+    S_total = batch["tokens"].shape[1] + (
+        cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+    assert x.shape == (B, S_total, cfg.d_model)
+    assert not bool(jnp.any(jnp.isnan(x)))
+    loss, (ce, moe_aux) = loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    st = init_train_state(cfg, key)
+    step = jax.jit(make_train_step(cfg, tie_lambda=1e-4))
+    batch = _batch(cfg, key)
+    tr, opt, metrics = step(st.frozen, st.B, st.trainable, st.opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # a second step must further change trainables & keep finiteness
+    tr2, opt2, m2 = step(st.frozen, st.B, tr, opt, batch)
+    assert np.isfinite(float(m2["loss"]))
+    changed = jax.tree.map(lambda a, b: bool(jnp.any(a != b)), tr, tr2)
+    assert any(jax.tree.leaves(changed))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Greedy next-token from the cache path == teacher-forced forward."""
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    B, S = 2, 8
+    batch = _batch(cfg, key, B=B, S=S)
+    toks = batch["tokens"]
+
+    # teacher-forced: argmax over each position's logits
+    x, _ = forward(cfg, params, batch)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_vision_tokens:]
+    from repro.common.axes import UNSHARDED
+    fwd_next, _ = L.lm_head_logits(cfg, params["head"], x, UNSHARDED)
+
+    # decode path: feed tokens one by one
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode starts from vision-prefixed cache; covered "
+                    "by dry-run + hybrid tests")
+    cache = init_cache(cfg, B, S + 1, enc_seq_local=cfg.enc_seq or 0,
+                       dtype=jnp.float32)
+    enc_len = None
+    if cfg.family == "encdec":
+        from repro.models.lm import prefill_cross_cache
+        cache, _ = prefill_cross_cache(cfg, params, batch["frames"], cache)
+        enc_len = cfg.enc_seq
+    preds = []
+    for t in range(S):
+        nxt, cache = decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                 jnp.int32(t), enc_len=enc_len)
+        preds.append(nxt)
+    preds = jnp.concatenate(preds, axis=1)
+    match = np.mean(np.asarray(preds) == np.asarray(fwd_next))
+    assert match >= 0.95, f"decode/forward mismatch: {match}"
