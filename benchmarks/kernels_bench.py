@@ -1,14 +1,18 @@
 """Kernel micro-benchmarks: jnp-oracle wall time on CPU (the Pallas path is
 TPU-targeted; interpret mode is correctness-only) + analytic TPU roofline
-estimates per kernel (bytes moved / FLOPs / v5e bounds)."""
+estimates per kernel (bytes moved / FLOPs / v5e bounds), plus the
+server-round `relevance` sweep (batched Eq. 4/5 vs the O(C²·k) Python
+loop reference)."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.relevance import RelevanceTracker
 from repro.kernels import ops
 from repro.sharding.analysis import HBM_BW, PEAK_FLOPS_BF16
 
@@ -20,6 +24,36 @@ def _time(fn, *args, iters=5):
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / iters
+
+
+def _wall(fn, iters=1, warmup=True):
+    if warmup:
+        fn()
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters
+
+
+def bench_relevance(Cs=(5, 20, 100), ks=(6, 24), D=128):
+    """Decayed all-pairs relevance (Eq. 4/5) on the parameter server: the
+    batched (C, C·k) path vs the loop reference (one device round-trip per
+    (i, j, age) similarity — the pre-vectorization scaling bottleneck)."""
+    rng = np.random.default_rng(0)
+    print("case,loop_ms,batched_ms,speedup")
+    for C in Cs:
+        for k in ks:
+            tr = RelevanceTracker(C, history_len=k, metric="kl")
+            for _ in range(k):
+                for c in range(C):
+                    tr.push(c, rng.standard_normal(D).astype(np.float32))
+            t_bat = _wall(lambda: tr.relevance(), iters=5)
+            # the loop's cost IS the dispatch overhead: a single call,
+            # no warmup (there is nothing to compile)
+            t_loop = _wall(lambda: tr.relevance(backend="loop"),
+                           iters=1, warmup=False)
+            print(f"relevance_C{C}_k{k},{t_loop*1e3:.1f},{t_bat*1e3:.2f},"
+                  f"{t_loop/t_bat:.0f}x", flush=True)
 
 
 def main():
@@ -63,4 +97,11 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["all", "kernels", "relevance"],
+                    default="all")
+    args = ap.parse_args()
+    if args.only in ("all", "kernels"):
+        main()
+    if args.only in ("all", "relevance"):
+        bench_relevance()

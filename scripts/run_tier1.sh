@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Reproducible tier-1 run: install dev extras (best-effort: the suite
+# degrades gracefully — hypothesis-only modules importorskip) and run the
+# ROADMAP verify command. Usage: scripts/run_tier1.sh [pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt \
+    || echo "warning: dev extras not installed (offline?); continuing" >&2
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

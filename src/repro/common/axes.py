@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.common.compat import axis_size, pcast_varying
+
 
 @dataclasses.dataclass(frozen=True)
 class AxisCtx:
@@ -31,11 +33,11 @@ class AxisCtx:
 
     @property
     def tp_size(self) -> int:
-        return lax.axis_size(self.tp) if self.tp else 1
+        return axis_size(self.tp) if self.tp else 1
 
     @property
     def dp_size(self) -> int:
-        return lax.axis_size(self.dp) if self.dp else 1
+        return axis_size(self.dp) if self.dp else 1
 
     def tp_index(self):
         return lax.axis_index(self.tp) if self.tp else 0
@@ -69,7 +71,7 @@ class AxisCtx:
         axes = tuple(a for a in (self.tp, self.dp, self.pod, self.dp2) if a)
         if not axes:
             return x
-        return jax.tree.map(lambda l: lax.pcast(l, axes, to="varying"), x)
+        return pcast_varying(x, axes)
 
     def vary_dp(self, x):
         """Vary over the data/pod axes only. Needed for batch-replicated
@@ -78,7 +80,7 @@ class AxisCtx:
         axes = self.dp_axes
         if not axes:
             return x
-        return jax.tree.map(lambda l: lax.pcast(l, axes, to="varying"), x)
+        return pcast_varying(x, axes)
 
 
 UNSHARDED = AxisCtx()

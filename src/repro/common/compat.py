@@ -1,0 +1,88 @@
+"""JAX version-compat shims.
+
+The launch stack targets the modern public API (``jax.shard_map``,
+``jax.set_mesh``); on 0.4.x those live under ``jax.experimental`` (with a
+``check_rep`` kwarg instead of ``check_vma``) or do not exist at all. Every
+call site imports from here so one module owns the version probing.
+"""
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+
+def resolve_shard_map(mod=jax):
+    """Return the shard_map callable for a given jax module layout.
+
+    New layout: ``mod.shard_map``. Old layout (<= 0.4.x): fall back to
+    ``jax.experimental.shard_map.shard_map``.
+    """
+    fn = getattr(mod, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn
+    return fn
+
+
+def adapt_check_kwarg(param_names, check_vma):
+    """Map the modern ``check_vma`` kwarg onto whatever the resolved
+    shard_map accepts. None -> library default on the new layout. On 0.4.x
+    the replication checker predates the vma type system and rejects valid
+    gradient programs (psum-transposed grads of replicated params infer as
+    unreplicated), while transposes are correct with or without it — so
+    ``check_rep`` is always disabled there."""
+    if "check_vma" in param_names:
+        return {} if check_vma is None else {"check_vma": check_vma}
+    if "check_rep" in param_names:
+        return {"check_rep": False}
+    return {}
+
+
+_SHARD_MAP = resolve_shard_map()
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_SHARD_MAP).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` on any supported JAX version."""
+    kwargs.update(adapt_check_kwarg(_SHARD_MAP_PARAMS, check_vma))
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def set_mesh(mesh):
+    """Mesh context manager: ``jax.set_mesh`` / ``jax.sharding.use_mesh``
+    where available. On 0.4.x shard_map takes the mesh explicitly and jit
+    reshards uncommitted inputs itself, so a null context is sufficient."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is None:
+        setter = getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+def axis_size(name):
+    """``lax.axis_size`` fallback: psum of a unit constant is folded to the
+    static axis size on versions that predate the public helper."""
+    from jax import lax
+    fn = getattr(lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return lax.psum(1, name)
+
+
+def pcast_varying(x, axes):
+    """``lax.pcast(..., to="varying")`` where vma typing exists; identity on
+    0.4.x, whose shard_map (check_rep) has no varying-mark requirement."""
+    from jax import lax
+    fn = getattr(lax, "pcast", None)
+    if fn is None:
+        return x
+    return jax.tree.map(lambda l: fn(l, axes, to="varying"), x)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels only compile for TPU; interpret everywhere else."""
+    return jax.default_backend() != "tpu"

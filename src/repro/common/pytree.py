@@ -49,3 +49,29 @@ def tree_unflatten_concat(flat, meta):
         leaves.append(jnp.reshape(flat[off:off + n], s))
         off += n
     return jax.tree.unflatten(treedef, leaves)
+
+
+def tree_stack_flatten(trees):
+    """Length-C list of structurally identical pytrees -> ((C, P) fp32
+    matrix, meta). The row layout matches ``tree_flatten_concat``; meta
+    additionally records per-leaf dtypes so unstacking restores them."""
+    leaves0, treedef = jax.tree.flatten(trees[0])
+    shapes = [l.shape for l in leaves0]
+    dtypes = [l.dtype for l in leaves0]
+    rows = [jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
+                             for l in jax.tree.leaves(t)]) for t in trees]
+    return jnp.stack(rows), (treedef, shapes, dtypes)
+
+
+def tree_unstack_unflatten(mat, meta):
+    """(R, P) matrix -> length-R list of pytrees (inverse of
+    ``tree_stack_flatten`` up to the fp32 round-trip)."""
+    treedef, shapes, dtypes = meta
+    sizes = [int(np.prod(s)) if len(s) else 1 for s in shapes]
+    offsets = np.cumsum([0] + sizes)
+    out = []
+    for i in range(mat.shape[0]):
+        leaves = [jnp.reshape(mat[i, o:o + n], s).astype(dt)
+                  for o, n, s, dt in zip(offsets, sizes, shapes, dtypes)]
+        out.append(jax.tree.unflatten(treedef, leaves))
+    return out

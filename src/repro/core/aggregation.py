@@ -2,18 +2,23 @@
 
     B_i = sum_{j in C\\i} W_ij^(t) * theta_j
 
-On the TPU mesh this is a client-axis weighted matmul over the flattened
-adaptive pytrees — see kernels/relevance_aggregate.py for the Pallas
-version; this module is the reference implementation that also runs the
-edge-scale benchmarks on CPU.
+The production path flattens the C adaptive pytrees to one (C, P) matrix
+(``common.pytree.tree_stack_flatten``) and runs the single W @ Θ matmul
+through ``kernels.ops.relevance_aggregate`` — the Pallas kernel on TPU, the
+jnp oracle elsewhere, interpret mode for kernel-correctness tests. The
+original per-leaf einsum is retained as ``backend="loop"``, the allclose
+reference.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.common.pytree import tree_stack_flatten, tree_unstack_unflatten
+from repro.kernels import ops
 
 
 def stack_thetas(thetas: Sequence):
@@ -25,19 +30,29 @@ def unstack(tree, n: int):
     return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
 
 
-def personalized_aggregate(thetas: Sequence, W) -> List:
-    """B_i = sum_j W[i, j] * theta_j for every client i.
+def personalized_aggregate(thetas: Sequence, W, *,
+                           backend: Optional[str] = None) -> List:
+    """B_i = sum_j W[i, j] * theta_j.
 
-    thetas: length-C list of adaptive pytrees; W: (C, C) with zero diagonal.
-    Returns a length-C list of base pytrees B_i.
+    thetas: length-C list of adaptive pytrees; W: (R, C) relevance rows
+    (R = C with zero diagonal in the classic all-clients round; R < C when
+    the server skips zero rows). Returns a length-R list of base pytrees.
+
+    backend: "loop" = per-leaf einsum reference; otherwise forwarded to
+    ``ops.relevance_aggregate`` over the flattened (C, P) stack (None =
+    detected backend: pallas on TPU, jnp oracle elsewhere).
     """
     W = jnp.asarray(W, jnp.float32)
-    stacked = stack_thetas(thetas)                     # leaves (C, ...)
-    agg = jax.tree.map(
-        lambda x: jnp.einsum(
-            "ij,j...->i...", W, x.astype(jnp.float32)).astype(x.dtype),
-        stacked)
-    return unstack(agg, W.shape[0])
+    if backend == "loop":
+        stacked = stack_thetas(thetas)                 # leaves (C, ...)
+        agg = jax.tree.map(
+            lambda x: jnp.einsum(
+                "ij,j...->i...", W, x.astype(jnp.float32)).astype(x.dtype),
+            stacked)
+        return unstack(agg, W.shape[0])
+    flat, meta = tree_stack_flatten(thetas)            # (C, P)
+    agg = ops.relevance_aggregate(W, flat, backend=backend)
+    return tree_unstack_unflatten(agg, meta)
 
 
 def fedavg_aggregate(thetas: Sequence, weights=None):

@@ -25,7 +25,7 @@ from repro.core import edge_model as EM
 from repro.core.adaptive import AdaptiveState, combine, init_adaptive
 from repro.core.aggregation import personalized_aggregate
 from repro.core.rehearsal import PrototypeMemory
-from repro.core.relevance import RelevanceTracker
+from repro.core.relevance import RelevanceTracker, normalize_rows
 from repro.core.tying import tying_loss
 from repro.federated.base import ClientState, Strategy
 
@@ -37,7 +37,7 @@ class FedSTIL(Strategy):
     def __init__(self, cfg, *, n_clients=5, metric="kl", forgetting_ratio=0.5,
                  history_len=6, memory_size=2000, per_identity=8,
                  lam_tie=1e-4, st_integration=True, rehearsal=True,
-                 tying=True, **kw):
+                 tying=True, server_backend=None, **kw):
         super().__init__(cfg, **kw)
         self.n_clients = n_clients
         self.lam_tie = lam_tie
@@ -46,9 +46,13 @@ class FedSTIL(Strategy):
         self.use_tying = tying
         self.memory_size = memory_size
         self.per_identity = per_identity
+        # server_backend: "loop" reference or a kernel backend for both the
+        # batched relevance and the flattened Eq. 6 aggregation
+        self.server_backend = server_backend
         self.tracker = RelevanceTracker(
             n_clients, history_len=history_len,
-            forgetting_ratio=forgetting_ratio, metric=metric)
+            forgetting_ratio=forgetting_ratio, metric=metric,
+            backend=server_backend)
         self.last_W: Optional[np.ndarray] = None
 
     # ---- decomposition -------------------------------------------------------
@@ -103,14 +107,21 @@ class FedSTIL(Strategy):
             self.tracker.push(c, uploads[c]["task_feature"])
         W = self.tracker.relevance()
         self.last_W = W
-        thetas = [uploads[c]["theta"] for c in clients]
-        bases = personalized_aggregate(thetas, W)
-        out = {}
-        for i, c in enumerate(clients):
-            if W[i].sum() > 0:
-                out[c] = {"B": bases[i]}
-            else:
-                out[c] = {}          # no relevant neighbours yet
+        # aggregate only rows with relevant neighbours: round 0 (and any
+        # client whose neighbours have no history yet) is an all-zero row —
+        # skipping it avoids wasted matmul rows and keeps NaNs out entirely.
+        # Under partial participation the subset rows are renormalized so
+        # Eq. 6 stays a convex combination of the neighbours that DID
+        # upload (identity when everyone uploads).
+        Wc = normalize_rows(W[np.ix_(clients, clients)])
+        nz = np.flatnonzero(Wc.sum(1) > 0)
+        out = {c: {} for c in clients}   # {} = no relevant neighbours yet
+        if nz.size:
+            thetas = [uploads[c]["theta"] for c in clients]
+            bases = personalized_aggregate(thetas, Wc[nz],
+                                           backend=self.server_backend)
+            for row, base in zip(nz, bases):
+                out[clients[row]] = {"B": base}
         return out
 
     def apply_dispatch(self, state, dispatch):

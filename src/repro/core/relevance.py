@@ -8,16 +8,64 @@ forgetting-ratio-decayed sum of similarities against j's task history:
 
 Rows are normalised over j != i so Eq. (6) is a convex combination of
 neighbour parameters (self-knowledge already lives in A_c / alpha_c).
+
+Two server implementations share this module:
+
+  * ``backend="loop"`` — the original O(C²·k) Python reference, one device
+    round-trip per (i, j, age) similarity. Kept as the allclose oracle.
+  * batched (default) — histories are stacked into a dense ``(C, k, D)``
+    array with a validity mask and all-pairs decayed relevance is one
+    ``(C, C·k)`` similarity matrix (the Pallas KL kernel for ``metric="kl"``)
+    contracted against the decay vector on device. ``backend`` then selects
+    the kernel path (``ref`` / ``pallas`` / ``interpret``); ``None`` picks
+    the compiled kernel on TPU and the jnp oracle elsewhere.
+
+``decayed_relevance`` is the shared Eq. 4/5 primitive: the on-mesh server
+(``launch/fed_round.py``) calls it per-client inside shard_map and the
+parameter-server tracker calls it for all clients at once.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.similarity import SIMILARITY_FNS
+from repro.core.similarity import SIMILARITY_FNS, pairwise_similarity
+
+
+def decayed_relevance(cur, hist, decay, valid=None, *, metric: str = "kl",
+                      backend: Optional[str] = None):
+    """Batched Eq. 4/5: decayed all-pairs relevance.
+
+    cur: (N, D) current task features; hist: (C, k, D) per-client task
+    histories; decay: (k,) per-slot decay weights (aligned with hist's k
+    axis); valid: optional (C, k) {0,1} mask for ragged histories.
+    Returns (N, C) *unnormalized* relevance (no diagonal masking).
+
+    ``backend`` selects the KL similarity kernel path only: cosine and
+    euclidean have a single jnp implementation (no Pallas kernel) and
+    ignore it.
+    """
+    C, k, D = hist.shape
+    flat = hist.reshape(C * k, D)
+    if metric == "kl":
+        from repro.kernels import ops
+        S = ops.kl_similarity(cur, flat, backend=backend)
+    else:
+        S = pairwise_similarity(cur, flat, metric=metric)
+    S = S.reshape(cur.shape[0], C, k)
+    if valid is not None:
+        S = S * valid[None, :, :]
+    return jnp.einsum("nck,k->nc", S, decay.astype(jnp.float32))
+
+
+def normalize_rows(W: np.ndarray) -> np.ndarray:
+    """Row-normalise, leaving all-zero rows (no relevant neighbours) zero."""
+    W = np.asarray(W, np.float32)
+    rows = W.sum(1, keepdims=True)
+    return np.divide(W, rows, out=np.zeros_like(W), where=rows > 0)
 
 
 @dataclasses.dataclass
@@ -26,6 +74,10 @@ class RelevanceTracker:
     history_len: int = 6          # k in Eq. (5)
     forgetting_ratio: float = 0.5  # lambda_f
     metric: str = "kl"
+    # "loop" = Python reference; otherwise the kernel backend for the
+    # batched path (kl only — cosine/euclidean have no kernel and use
+    # their single jnp implementation regardless)
+    backend: Optional[str] = None
 
     def __post_init__(self):
         # history[c] = list of task features, most recent last
@@ -37,8 +89,47 @@ class RelevanceTracker:
         if len(h) > self.history_len:
             h.pop(0)
 
-    def relevance(self) -> np.ndarray:
+    def stacked_history(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Dense (C, k, D) age-major history (most recent at age 0) plus a
+        (C, k) validity mask; None while every history is empty."""
+        C, k = self.n_clients, self.history_len
+        D = next((h[-1].shape[-1] for h in self.history if h), None)
+        if D is None:
+            return None
+        dense = np.zeros((C, k, D), np.float32)
+        valid = np.zeros((C, k), np.float32)
+        for j, h in enumerate(self.history):
+            for age, feat in enumerate(reversed(h)):
+                if age >= k:
+                    break
+                dense[j, age] = feat
+                valid[j, age] = 1.0
+        return dense, valid
+
+    def relevance(self, backend: Optional[str] = None) -> np.ndarray:
         """W (C, C): row i = normalized relevance of neighbours j for i."""
+        b = backend if backend is not None else self.backend
+        if b == "loop":
+            return self._relevance_loop()
+        return self._relevance_batched(b)
+
+    def _relevance_batched(self, backend: Optional[str]) -> np.ndarray:
+        C, k = self.n_clients, self.history_len
+        stacked = self.stacked_history()
+        if stacked is None:
+            return np.zeros((C, C), np.float32)
+        dense, valid = stacked
+        cur = dense[:, 0]                     # each client's latest feature
+        has_cur = valid[:, 0]                 # rows without history stay 0
+        decay = self.forgetting_ratio ** np.arange(k, dtype=np.float32)
+        W = decayed_relevance(jnp.asarray(cur), jnp.asarray(dense),
+                              jnp.asarray(decay), jnp.asarray(valid),
+                              metric=self.metric, backend=backend)
+        W = W * has_cur[:, None] * (1.0 - jnp.eye(C, dtype=jnp.float32))
+        return normalize_rows(np.asarray(W))
+
+    def _relevance_loop(self) -> np.ndarray:
+        """Reference O(C²·k) implementation (one device trip per pair)."""
         C = self.n_clients
         fn = SIMILARITY_FNS[self.metric]
         W = np.zeros((C, C), np.float32)
@@ -56,7 +147,4 @@ class RelevanceTracker:
                     s = float(fn(cur, jnp.asarray(feat)))
                     acc += (self.forgetting_ratio ** age) * s
                 W[i, j] = acc
-        # row-normalise over neighbours
-        rows = W.sum(1, keepdims=True)
-        W = np.divide(W, rows, out=np.zeros_like(W), where=rows > 0)
-        return W
+        return normalize_rows(W)

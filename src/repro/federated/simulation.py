@@ -31,6 +31,7 @@ class SimulationResult:
     comm: CommLog
     storage_bytes: int
     rounds: List[Dict[str, float]]      # per-eval-round mean metrics
+    server_time_s: float = 0.0          # wall time inside server_round
 
     def final(self, key="mAP") -> float:
         return self.rounds[-1][key] if self.rounds else 0.0
@@ -54,6 +55,7 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
     tracker = LifelongTracker(C)
     comm = CommLog()
     eval_rounds: List[Dict[str, float]] = []
+    server_s = 0.0
 
     # pre-extract prototypes for every task (extraction layers are frozen)
     protos = {}
@@ -90,7 +92,9 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                 comm.log_c2s(rnd, strategy.upload_bytes(up))
 
         if strategy.uses_server and uploads:
+            t0 = time.perf_counter()
             dispatches = strategy.server_round(rnd, uploads)
+            server_s += time.perf_counter() - t0
             for c, d in dispatches.items():
                 if d:
                     comm.log_s2c(rnd, strategy.dispatch_bytes(d))
@@ -122,4 +126,5 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                       f"F={per_round['forgetting_mAP']:.4f}")
 
     storage = max(strategy.storage_bytes(states[c]) for c in range(C))
-    return SimulationResult(strategy.name, tracker, comm, storage, eval_rounds)
+    return SimulationResult(strategy.name, tracker, comm, storage, eval_rounds,
+                            server_time_s=server_s)

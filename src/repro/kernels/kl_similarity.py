@@ -10,9 +10,13 @@ history on the parameter server every round.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.common.compat import default_interpret
 
 N_BLOCK = 128
 M_BLOCK = 128
@@ -33,8 +37,10 @@ def _kl_kernel(a_ref, b_ref, o_ref):
 
 
 def kl_similarity(a, b, *, n_block: int = N_BLOCK, m_block: int = M_BLOCK,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """a: (N, D), b: (M, D) -> (N, M) fp32 similarities in (0, 1]."""
+    if interpret is None:
+        interpret = default_interpret()
     N, D = a.shape
     M = b.shape[0]
     n_block = min(n_block, max(8, N))

@@ -4,6 +4,7 @@
   * "ref"       — pure-jnp oracle (default on CPU / in the dry-run HLO)
   * "pallas"    — compiled Pallas TPU kernel (production)
   * "interpret" — Pallas kernel body interpreted on CPU (correctness tests)
+  * "auto"/None — "pallas" on TPU, "ref" everywhere else
 """
 from __future__ import annotations
 
@@ -19,11 +20,13 @@ from repro.kernels.kl_similarity import kl_similarity as _kl
 from repro.kernels.pairwise_dist import pairwise_dist as _pdist
 from repro.kernels.relevance_aggregate import relevance_aggregate as _agg
 
-DEFAULT_BACKEND = "ref"
+DEFAULT_BACKEND = "auto"
 
 
 def _dispatch(backend):
     b = backend or DEFAULT_BACKEND
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "ref"
     if b not in ("ref", "pallas", "interpret"):
         raise ValueError(f"unknown kernel backend {b!r}")
     return b

@@ -7,10 +7,13 @@ the inner product on the MXU; tiles (q_block x D) x (g_block x D).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.common.compat import default_interpret
 
 Q_BLOCK = 128
 G_BLOCK = 128
@@ -27,9 +30,11 @@ def _dist_kernel(q_ref, g_ref, o_ref):
 
 
 def pairwise_dist(q, g, *, q_block: int = Q_BLOCK, g_block: int = G_BLOCK,
-                  interpret: bool = True):
+                  interpret: Optional[bool] = None):
     """(Q, D) x (G, D) -> (Q, G) fp32 squared distances. Q, G padded to
     block multiples internally."""
+    if interpret is None:
+        interpret = default_interpret()
     Q, D = q.shape
     G = g.shape[0]
     q_block = min(q_block, max(8, Q))

@@ -9,15 +9,19 @@ bandwidth-bound, reading each client's parameters exactly once.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.common.compat import default_interpret
 
 P_BLOCK = 2048
 
 
 def _agg_kernel(w_ref, t_ref, o_ref):
-    w = w_ref[...].astype(jnp.float32)          # (C, C)
+    w = w_ref[...].astype(jnp.float32)          # (R, C)
     t = t_ref[...].astype(jnp.float32)          # (C, pb)
     o_ref[...] = jax.lax.dot_general(
         w, t, (((1,), (0,)), ((), ())),
@@ -25,8 +29,12 @@ def _agg_kernel(w_ref, t_ref, o_ref):
 
 
 def relevance_aggregate(w, thetas, *, p_block: int = P_BLOCK,
-                        interpret: bool = True):
-    """w: (C, C); thetas: (C, P) -> (C, P)."""
+                        interpret: Optional[bool] = None):
+    """w: (R, C) relevance rows; thetas: (C, P) -> (R, P). R = C in the
+    classic round; R < C when the server skips zero-relevance rows."""
+    if interpret is None:
+        interpret = default_interpret()
+    R = w.shape[0]
     C, Pn = thetas.shape
     p_block = min(p_block, max(128, Pn))
     Pp = (Pn + p_block - 1) // p_block * p_block
@@ -36,11 +44,11 @@ def relevance_aggregate(w, thetas, *, p_block: int = P_BLOCK,
         _agg_kernel,
         grid=(Pp // p_block,),
         in_specs=[
-            pl.BlockSpec((C, C), lambda i: (0, 0)),
+            pl.BlockSpec((R, C), lambda i: (0, 0)),
             pl.BlockSpec((C, p_block), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((C, p_block), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((C, Pp), thetas.dtype),
+        out_specs=pl.BlockSpec((R, p_block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((R, Pp), thetas.dtype),
         interpret=interpret,
     )(w, tp)
     return out[:, :Pn]

@@ -38,8 +38,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.common.axes import AxisCtx
+from repro.common.compat import set_mesh, shard_map
 from repro.common.pytree import tree_flatten_concat, tree_unflatten_concat
-from repro.core.similarity import kl_similarity
+from repro.core.relevance import decayed_relevance
 
 
 def fed_round(theta_local, task_feature_local, hist_features_local, *,
@@ -55,22 +56,19 @@ def fed_round(theta_local, task_feature_local, hist_features_local, *,
     Returns (B_local: same pytree = this client's personalized base,
              W_row: (C,) this client's relevance row).
     """
-    C = lax.axis_size(client_axis)
     me = lax.axis_index(client_axis)
 
-    # (1) gather every client's current + historical task features (tiny)
-    cur = lax.all_gather(task_feature_local, client_axis)        # (C, D)
+    # (1) gather every client's historical task features (tiny)
     hist = lax.all_gather(hist_features_local, client_axis)      # (C, k, D)
-    k = hist.shape[1]
+    C, k = hist.shape[0], hist.shape[1]
 
-    # (2) Eq. 4/5: decayed similarity of MY current task vs THEIR histories
+    # (2) Eq. 4/5 via the shared batched primitive: decayed similarity of
+    # MY current task vs THEIR histories (hist is most-recent-last, so the
+    # decay vector is reversed). "ref" keeps the lowering free of
+    # pallas_call so the same program compiles on any mesh backend.
     decay = forgetting_ratio ** jnp.arange(k - 1, -1, -1, jnp.float32)
-
-    def rel_to(j_hist):   # (k, D) -> scalar
-        sims = jax.vmap(lambda f: kl_similarity(task_feature_local, f))(j_hist)
-        return jnp.sum(decay * sims)
-
-    w_row = jax.vmap(rel_to)(hist)                               # (C,)
+    w_row = decayed_relevance(task_feature_local[None], hist, decay,
+                              metric="kl", backend="ref")[0]     # (C,)
     w_row = jnp.where(jnp.arange(C) == me, 0.0, w_row)           # j != i
     w_row = w_row / jnp.maximum(jnp.sum(w_row), 1e-9)
 
@@ -129,29 +127,27 @@ def _demo():
         B, w_row = fed_round(th, feat[0], hist[0], client_axis="data")
         return B["w"][None], w_row[None]
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step, mesh=mesh,
         in_specs=(P("data", "model"), P("data", None), P("data", None, None)),
         out_specs=(P("data", "model"), P("data", None))))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         B, W = fn(thetas, feats, hists)
 
-    # numpy reference server (same math as repro.core.relevance/aggregation)
-    import numpy as np
-    from repro.core.similarity import kl_similarity as klj
-    Wref = np.zeros((C, C), np.float32)
-    decay = 0.5 ** np.arange(k - 1, -1, -1)
-    for i in range(C):
-        for j in range(C):
-            if i == j:
-                continue
-            sims = [float(klj(feats[i], hists[j, a])) for a in range(k)]
-            Wref[i, j] = float((decay * np.array(sims)).sum())
-    Wref /= Wref.sum(1, keepdims=True)
-    Bref = Wref @ np.asarray(thetas)
+    # reference server: the same batched code the parameter server runs
+    # (core.relevance + the Pallas Eq. 6 kernel in interpret mode)
+    from repro.core.relevance import normalize_rows
+    from repro.kernels import ops
+    decay = 0.5 ** jnp.arange(k - 1, -1, -1, jnp.float32)
+    Wref = np.array(decayed_relevance(feats, hists, decay,
+                                      metric="kl", backend="ref"))
+    np.fill_diagonal(Wref, 0.0)
+    Wref = normalize_rows(Wref)
+    Bref = np.asarray(ops.relevance_aggregate(
+        jnp.asarray(Wref), thetas, backend="interpret"))
     np.testing.assert_allclose(np.asarray(W), Wref, rtol=1e-4, atol=1e-5)
     np.testing.assert_allclose(np.asarray(B), Bref, rtol=1e-3, atol=1e-4)
-    print("fed_round on-mesh == numpy parameter server  (W, B match)")
+    print("fed_round on-mesh == batched parameter server  (W, B match)")
     print("W =\n", np.round(np.asarray(W), 3))
 
 
@@ -189,11 +185,11 @@ def _lower(arch: str, multi_pod: bool):
                       is_leaf=lambda x: isinstance(x, P))
     in_specs = (sp, P(c_axes, None), P(c_axes, None, None))
     out_specs = (sp, P(c_axes, None))
-    fn = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=in_specs,
-                               out_specs=out_specs, check_vma=False))
+    fn = jax.jit(shard_map(step, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False))
     feats = jax.ShapeDtypeStruct((C, D), jnp.float32)
     hists = jax.ShapeDtypeStruct((C, k, D), jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = fn.lower(theta, feats, hists).compile()
     from repro.sharding.analysis import parse_collectives
     coll = parse_collectives(compiled.as_text())

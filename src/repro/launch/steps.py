@@ -15,6 +15,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.common.axes import AxisCtx
+from repro.common.compat import shard_map
 from repro.configs.base import (
     LONG_CONTEXT_WINDOW,
     INPUT_SHAPES,
@@ -106,8 +107,8 @@ def _shmap(fn, mesh, in_specs, out_specs, check=True):
     # paths therefore ALWAYS run checked; the one exception is batch-
     # replicated decode of FSDP archs (no autodiff there), where gathered
     # weights make semantically-replicated outputs formally "varying".
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=check)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=check)
 
 
 def abstract_train_state(cfg: ModelConfig, tp: int):

@@ -1,0 +1,158 @@
+"""Regression tests: the vectorized server round (batched relevance +
+kernel-backed Eq. 6 aggregation) matches the retained loop reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import personalized_aggregate
+from repro.core.relevance import RelevanceTracker, decayed_relevance, normalize_rows
+
+
+def _filled_tracker(C, metric, *, history_len=4, ragged=True, seed=0, D=16):
+    """Tracker with a ragged history: client j has j pushes (0 = empty)
+    when ragged, else a full history for everyone (plus one overflow push
+    so the history-cap path is exercised)."""
+    rng = np.random.default_rng(seed)
+    tr = RelevanceTracker(C, history_len=history_len, forgetting_ratio=0.5,
+                          metric=metric)
+    for j in range(C):
+        n = j if ragged else history_len + 1
+        for _ in range(n):
+            tr.push(j, rng.standard_normal(D).astype(np.float32))
+    return tr
+
+
+@pytest.mark.parametrize("metric", ["kl", "cosine", "euclidean"])
+@pytest.mark.parametrize("C", [1, 2, 5])
+@pytest.mark.parametrize("ragged", [True, False])
+def test_batched_relevance_matches_loop(metric, C, ragged):
+    tr = _filled_tracker(C, metric, ragged=ragged)
+    W_loop = tr.relevance(backend="loop")
+    W_batched = tr.relevance()
+    assert W_batched.shape == (C, C)
+    np.testing.assert_allclose(W_batched, W_loop, atol=1e-5)
+    assert np.allclose(np.diag(W_batched), 0.0)
+    rows = W_batched.sum(1)
+    assert ((np.isclose(rows, 1.0, atol=1e-4)) | (rows == 0)).all()
+
+
+def test_batched_relevance_interpret_kernel_matches_loop():
+    tr = _filled_tracker(5, "kl", ragged=True)
+    np.testing.assert_allclose(tr.relevance(backend="interpret"),
+                               tr.relevance(backend="loop"), atol=1e-5)
+
+
+def test_relevance_empty_history_is_all_zero():
+    tr = RelevanceTracker(3, history_len=4)
+    for backend in ("loop", None):
+        W = tr.relevance(backend=backend)
+        assert W.shape == (3, 3) and (W == 0).all()
+
+
+def test_decayed_relevance_validity_mask():
+    """Padded history slots must contribute nothing."""
+    rng = np.random.default_rng(1)
+    cur = jnp.asarray(rng.standard_normal((2, 8)).astype(np.float32))
+    hist = jnp.asarray(rng.standard_normal((3, 4, 8)).astype(np.float32))
+    decay = jnp.asarray(0.5 ** np.arange(4, dtype=np.float32))
+    valid = jnp.asarray(np.array([[1, 1, 0, 0], [1, 0, 0, 0], [1, 1, 1, 1]],
+                                 np.float32))
+    W = decayed_relevance(cur, hist, decay, valid, metric="kl")
+    hist_zeroed = hist * valid[:, :, None]
+    W2 = decayed_relevance(cur, hist_zeroed, decay, valid, metric="kl")
+    np.testing.assert_allclose(np.asarray(W), np.asarray(W2), atol=1e-6)
+
+
+def test_normalize_rows_zero_row_safe():
+    W = np.array([[0.0, 0.0], [3.0, 1.0]], np.float32)
+    out = normalize_rows(W)
+    assert not np.isnan(out).any()
+    np.testing.assert_allclose(out, [[0.0, 0.0], [0.75, 0.25]])
+
+
+def _random_thetas(C, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"alpha": jnp.asarray(rng.standard_normal((3, 4)).astype(np.float32)),
+             "A": [jnp.asarray(rng.standard_normal(7).astype(np.float32)),
+                   jnp.asarray(rng.standard_normal((2, 2)).astype(np.float32))]}
+            for _ in range(C)]
+
+
+@pytest.mark.parametrize("backend", [None, "ref", "interpret"])
+@pytest.mark.parametrize("C", [1, 2, 5])
+def test_personalized_aggregate_matches_loop(backend, C):
+    thetas = _random_thetas(C)
+    rng = np.random.default_rng(3)
+    W = rng.random((C, C)).astype(np.float32)
+    np.fill_diagonal(W, 0)
+    ref = personalized_aggregate(thetas, W, backend="loop")
+    out = personalized_aggregate(thetas, W, backend=backend)
+    assert len(out) == C
+    for r, o in zip(ref, out):
+        for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(o)):
+            assert a.dtype == b.dtype
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_personalized_aggregate_row_subset():
+    """The zero-row-skip path aggregates only the requested rows."""
+    thetas = _random_thetas(4, seed=5)
+    rng = np.random.default_rng(6)
+    W = rng.random((4, 4)).astype(np.float32)
+    np.fill_diagonal(W, 0)
+    full = personalized_aggregate(thetas, W, backend="loop")
+    sub = personalized_aggregate(thetas, W[[1, 3]], backend="interpret")
+    assert len(sub) == 2
+    for r, o in zip((full[1], full[3]), sub):
+        for a, b in zip(jax.tree.leaves(r), jax.tree.leaves(o)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_server_round_skips_zero_rows():
+    """A client whose neighbours have no history gets an all-zero relevance
+    row: the server must skip its base entirely (no NaNs, no wasted rows)."""
+    from repro.core.edge_model import EdgeModelConfig
+    from repro.core.fedstil import FedSTIL
+
+    rng = np.random.default_rng(0)
+
+    def upload(c):
+        return {"theta": {"w": jnp.ones((2,)) * c},
+                "task_feature": rng.standard_normal(4).astype(np.float32)}
+
+    cfg = EdgeModelConfig(n_classes=8)
+    s = FedSTIL(cfg, n_clients=3)
+    # round 0: only client 0 uploads -> its neighbours have no history
+    out = s.server_round(0, {0: upload(0)})
+    assert out == {0: {}}
+    assert not np.isnan(s.last_W).any()
+    # later round: everyone uploads, every row is nonzero -> all get bases
+    out2 = s.server_round(1, {c: upload(c) for c in range(3)})
+    assert set(out2) == {0, 1, 2}
+    assert all("B" in d for d in out2.values())
+    for d in out2.values():
+        assert not np.isnan(np.asarray(d["B"]["w"])).any()
+
+
+def test_server_round_partial_participation_renormalizes():
+    """When only a subset uploads, Eq. 6 must stay a convex combination of
+    the neighbours that DID upload (not silently down-scaled by the absent
+    clients' relevance mass)."""
+    from repro.core.edge_model import EdgeModelConfig
+    from repro.core.fedstil import FedSTIL
+
+    rng = np.random.default_rng(2)
+
+    def upload(c):
+        return {"theta": {"w": jnp.ones((2,)) * (c + 1)},
+                "task_feature": rng.standard_normal(4).astype(np.float32)}
+
+    cfg = EdgeModelConfig(n_classes=8)
+    s = FedSTIL(cfg, n_clients=3)
+    s.server_round(0, {c: upload(c) for c in range(3)})   # seed histories
+    # client 2 drops out: client 0's base must be exactly theta_1 (its only
+    # participating neighbour), weight 1 after renormalization
+    out = s.server_round(1, {0: upload(0), 1: upload(1)})
+    np.testing.assert_allclose(np.asarray(out[0]["B"]["w"]), 2.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]["B"]["w"]), 1.0, atol=1e-5)
