@@ -18,8 +18,11 @@ from repro.sharding.analysis import HBM_BW, PEAK_FLOPS_BF16
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # warmup: evaluate exactly once (a second call here would double-count
+    # one-shot compile/dispatch cost into the warmup of cheap kernels)
+    out = fn(*args)
+    out[0].block_until_ready() if isinstance(out, tuple) else \
+        jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

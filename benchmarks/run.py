@@ -1,7 +1,9 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
 ``python -m benchmarks.run [--only tableN]`` prints each table plus
-``name,us_per_call,derived`` CSV rows.
+``name,us_per_call,derived`` CSV rows. ``--bench server`` runs the
+host-vs-stacked server-round sweep and writes ``BENCH_server_round.json``
+(the machine-readable perf trajectory future PRs regress against).
 """
 import argparse
 import sys
@@ -12,7 +14,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table2|table3|table4|table5|table6|fig6|fig8|kernels")
+    ap.add_argument("--bench", default=None, choices=["server"],
+                    help="perf-trajectory benches (JSON output)")
     args = ap.parse_args()
+
+    if args.bench == "server":
+        from benchmarks.server_round import main as server_main
+        server_main()
+        if args.only is None:
+            return
 
     from benchmarks import (fig6_rounds, fig8_comm, kernels_bench,
                             table2_methods, table3_ablation, table4_memory,

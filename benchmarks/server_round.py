@@ -1,0 +1,101 @@
+"""Per-round server wall time: host engine vs the stacked device program.
+
+The host path is PR 1's parameter server — per-client upload dicts, tracker
+push into host lists, (re)stacking C pytrees to a (C, P) matrix every round,
+normalize on host, unstacking C base pytrees. The stacked path is this PR's
+device-resident program — one batched ring push, decayed relevance over the
+resident (C, k, D) history, and the fused normalize+mask+aggregate kernel
+over the already-stacked (C, ...) parameter pytree.
+
+``python -m benchmarks.run --bench server`` sweeps C ∈ {5, 20, 100} and
+writes ``BENCH_server_round.json`` (repo root) so future PRs have a
+machine-readable perf trajectory to regress against.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_size, tree_stack
+from repro.core import edge_model as EM
+from repro.core.edge_model import EdgeModelConfig
+from repro.core.fedstil import FedSTIL
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_server_round.json"
+
+
+def _client_thetas(C: int, cfg: EdgeModelConfig):
+    keys = jax.random.split(jax.random.PRNGKey(0), C)
+    return [EM.init_adaptive_layers(k, cfg) for k in keys]
+
+
+def _bench_host(C, cfg, thetas, feats, iters):
+    strat = FedSTIL(cfg, n_clients=C)
+    def one_round(r):
+        uploads = {c: {"theta": thetas[c], "task_feature": feats[r % len(feats), c]}
+                   for c in range(C)}
+        dispatches = strat.server_round(r, uploads)
+        jax.block_until_ready([jax.tree.leaves(d["B"])
+                               for d in dispatches.values() if d])
+    one_round(0)                             # warmup (jit compile)
+    t0 = time.perf_counter()
+    for r in range(1, iters + 1):
+        one_round(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def _bench_stacked(C, cfg, thetas, feats, iters):
+    strat = FedSTIL(cfg, n_clients=C)
+    stacked_theta = tree_stack(thetas)       # resident between rounds
+    feats_dev = jnp.asarray(feats)
+    def one_round(r):
+        upload = {"theta": stacked_theta,
+                  "task_feature": feats_dev[r % len(feats)]}
+        d = strat.server_round_stacked(r, upload)
+        jax.block_until_ready(jax.tree.leaves(d["B"]))
+    one_round(0)                             # warmup (jit compile)
+    t0 = time.perf_counter()
+    for r in range(1, iters + 1):
+        one_round(r)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_server_round(Cs=(5, 20, 100), *, D=128, iters=8, out=DEFAULT_OUT):
+    rng = np.random.default_rng(0)
+    cfg = EdgeModelConfig()
+    cases = []
+    print("C,host_ms,stacked_ms,speedup")
+    for C in Cs:
+        thetas = _client_thetas(C, cfg)
+        feats = rng.standard_normal((iters + 1, C, D)).astype(np.float32)
+        host_s = _bench_host(C, cfg, thetas, feats, iters)
+        stacked_s = _bench_stacked(C, cfg, thetas, feats, iters)
+        case = {"C": C, "host_ms": host_s * 1e3,
+                "stacked_ms": stacked_s * 1e3,
+                "speedup": host_s / stacked_s}
+        cases.append(case)
+        print(f"{C},{case['host_ms']:.2f},{case['stacked_ms']:.2f},"
+              f"{case['speedup']:.1f}x", flush=True)
+    payload = {
+        "bench": "server_round",
+        "config": {"D": D, "history_len": 6, "iters": iters,
+                   "params_per_client": tree_size(thetas[0]),
+                   "backend": jax.default_backend()},
+        "cases": cases,
+    }
+    Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    return payload
+
+
+def main():
+    bench_server_round()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,45 @@
 #!/usr/bin/env bash
 # Reproducible tier-1 run: install dev extras (best-effort: the suite
 # degrades gracefully — hypothesis-only modules importorskip) and run the
-# ROADMAP verify command. Usage: scripts/run_tier1.sh [pytest args...]
+# ROADMAP verify command.
+#
+# Usage: scripts/run_tier1.sh [--smoke] [pytest args...]
+#   --smoke  additionally exercise the device-resident path end-to-end:
+#            a 2-round FedSTIL simulation on engine="stacked" and the
+#            `--only relevance` kernel-bench sweep.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+SMOKE=0
+if [[ "${1:-}" == "--smoke" ]]; then
+    SMOKE=1
+    shift
+fi
 
 python -m pip install -q -r requirements-dev.txt \
     || echo "warning: dev extras not installed (offline?); continuing" >&2
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+if [[ "$SMOKE" == "1" ]]; then
+    echo "=== smoke: 2-round engine=\"stacked\" FedSTIL simulation ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+from repro.core import FedSTIL
+from repro.core.edge_model import EdgeModelConfig
+from repro.data import FederatedReIDBenchmark
+
+from repro.federated import run_simulation
+
+bench = FederatedReIDBenchmark(n_clients=3, n_tasks=2, n_identities=40,
+                               ids_per_task=8, samples_per_id=6, seed=0)
+cfg = EdgeModelConfig(n_classes=bench.n_classes)
+res = run_simulation(FedSTIL(cfg, n_clients=3, epochs=2), bench,
+                     rounds=2, eval_every=2, engine="stacked", verbose=True)
+assert res.rounds, "stacked smoke produced no eval rounds"
+print(f"stacked smoke OK: mAP={res.final('mAP'):.4f} "
+      f"server={res.server_time_s*1e3:.1f}ms")
+EOF
+    echo "=== smoke: relevance bench sweep ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.kernels_bench --only relevance
+fi

@@ -51,6 +51,22 @@ def tree_unflatten_concat(flat, meta):
     return jax.tree.unflatten(treedef, leaves)
 
 
+def tree_stack(trees):
+    """Length-C list of structurally identical pytrees -> one pytree whose
+    leaves carry a leading C dim (the stacked-over-clients layout)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree, n: int):
+    """Inverse of ``tree_stack``: split the leading dim back into a list."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_slice(tree, i: int):
+    """Client ``i``'s slice of a stacked pytree (leaves lose the C dim)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
 def tree_stack_flatten(trees):
     """Length-C list of structurally identical pytrees -> ((C, P) fp32
     matrix, meta). The row layout matches ``tree_flatten_concat``; meta
@@ -61,6 +77,35 @@ def tree_stack_flatten(trees):
     rows = [jnp.concatenate([jnp.ravel(l).astype(jnp.float32)
                              for l in jax.tree.leaves(t)]) for t in trees]
     return jnp.stack(rows), (treedef, shapes, dtypes)
+
+
+def tree_flatten_stacked(tree):
+    """Stacked pytree (every leaf (C, ...)) -> ((C, P) fp32 matrix, meta).
+
+    Device-resident counterpart of ``tree_stack_flatten``: the input already
+    carries the leading client dim, so flattening is a reshape+concat on
+    device (no per-client Python loop). Row layout matches
+    ``tree_flatten_concat`` / ``tree_stack_flatten``.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    C = leaves[0].shape[0]
+    shapes = [l.shape[1:] for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    mat = jnp.concatenate(
+        [jnp.reshape(l, (C, -1)).astype(jnp.float32) for l in leaves], axis=1)
+    return mat, (treedef, shapes, dtypes)
+
+
+def tree_unflatten_stacked(mat, meta):
+    """(C, P) matrix -> stacked pytree with leading C dim (inverse of
+    ``tree_flatten_stacked`` up to the fp32 round-trip)."""
+    treedef, shapes, dtypes = meta
+    C = mat.shape[0]
+    sizes = [int(np.prod(s)) if len(s) else 1 for s in shapes]
+    offsets = np.cumsum([0] + sizes)
+    leaves = [jnp.reshape(mat[:, o:o + n], (C,) + tuple(s)).astype(dt)
+              for o, n, s, dt in zip(offsets, sizes, shapes, dtypes)]
+    return jax.tree.unflatten(treedef, leaves)
 
 
 def tree_unstack_unflatten(mat, meta):

@@ -17,17 +17,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_stack_flatten, tree_unstack_unflatten
+from repro.common.pytree import (tree_stack, tree_stack_flatten,
+                                 tree_unstack, tree_unstack_unflatten)
 from repro.kernels import ops
 
 
 def stack_thetas(thetas: Sequence):
     """List of C identical pytrees -> single pytree with leading C dim."""
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *thetas)
+    return tree_stack(thetas)
 
 
 def unstack(tree, n: int):
-    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+    return tree_unstack(tree, n)
 
 
 def personalized_aggregate(thetas: Sequence, W, *,

@@ -13,12 +13,15 @@ Two server implementations share this module:
 
   * ``backend="loop"`` — the original O(C²·k) Python reference, one device
     round-trip per (i, j, age) similarity. Kept as the allclose oracle.
-  * batched (default) — histories are stacked into a dense ``(C, k, D)``
-    array with a validity mask and all-pairs decayed relevance is one
-    ``(C, C·k)`` similarity matrix (the Pallas KL kernel for ``metric="kl"``)
-    contracted against the decay vector on device. ``backend`` then selects
-    the kernel path (``ref`` / ``pallas`` / ``interpret``); ``None`` picks
-    the compiled kernel on TPU and the jnp oracle elsewhere.
+  * batched (default) — histories live in a device-resident ``(C, k, D)``
+    ring buffer with a ``(C, k)`` validity mask (``DeviceRingHistory``,
+    updated by one batched roll/scatter per round via the tracker's
+    ``push_all``; per-client ``push`` falls back to re-stacking the host
+    lists) and all-pairs decayed relevance is one ``(C, C·k)`` similarity
+    matrix (the Pallas KL kernel for ``metric="kl"``) contracted against
+    the decay vector on device. ``backend`` then selects the kernel path
+    (``ref`` / ``pallas`` / ``interpret``); ``None`` picks the compiled
+    kernel on TPU and the jnp oracle elsewhere.
 
 ``decayed_relevance`` is the shared Eq. 4/5 primitive: the on-mesh server
 (``launch/fed_round.py``) calls it per-client inside shard_map and the
@@ -27,8 +30,10 @@ parameter-server tracker calls it for all clients at once.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -68,6 +73,72 @@ def normalize_rows(W: np.ndarray) -> np.ndarray:
     return np.divide(W, rows, out=np.zeros_like(W), where=rows > 0)
 
 
+@jax.jit
+def _ring_push(buf, valid, feats, mask):
+    """Batched roll/scatter ring update: age-major shift (most recent at
+    age 0) for rows selected by ``mask``; unselected rows are untouched."""
+    rolled = jnp.roll(buf, 1, axis=1).at[:, 0].set(feats)
+    rvalid = jnp.roll(valid, 1, axis=1).at[:, 0].set(1.0)
+    keep = mask > 0
+    buf = jnp.where(keep[:, None, None], rolled, buf)
+    valid = jnp.where(keep[:, None], rvalid, valid)
+    return buf, valid
+
+
+def ring_relevance(buf, valid, *, forgetting_ratio: float, metric: str = "kl",
+                   backend: Optional[str] = None):
+    """Unnormalized (C, C) decayed relevance over a ring-buffer history:
+    each client's latest feature (age 0) vs every history, rows without a
+    current feature zeroed. Diagonal NOT masked — the fused aggregate
+    kernel owns that. jit-traceable; shared by ``DeviceRingHistory`` and
+    the stacked FedSTIL server program."""
+    k = buf.shape[1]
+    decay = forgetting_ratio ** jnp.arange(k, dtype=jnp.float32)
+    W = decayed_relevance(buf[:, 0], buf, decay, valid,
+                          metric=metric, backend=backend)
+    return W * valid[:, 0][:, None]
+
+
+@dataclasses.dataclass
+class DeviceRingHistory:
+    """Device-resident (C, k, D) task-feature history (age-major: most
+    recent at age 0) with a (C, k) validity mask.
+
+    The layout is identical to ``RelevanceTracker.stacked_history`` — which
+    stays as the host-list oracle — but the buffer lives on device between
+    rounds and is updated by one batched roll/scatter per round instead of
+    being re-stacked from Python lists.
+    """
+
+    n_clients: int
+    history_len: int
+    dim: int
+
+    def __post_init__(self):
+        C, k, D = self.n_clients, self.history_len, self.dim
+        self.buf = jnp.zeros((C, k, D), jnp.float32)
+        self.valid = jnp.zeros((C, k), jnp.float32)
+
+    def push_all(self, feats, mask=None):
+        """feats: (C, D) this round's task features; mask: optional (C,)
+        {0,1} participation (rows with 0 keep their history untouched)."""
+        feats = jnp.asarray(feats, jnp.float32)
+        if mask is None:
+            mask = jnp.ones((self.n_clients,), jnp.float32)
+        self.buf, self.valid = _ring_push(self.buf, self.valid, feats,
+                                          jnp.asarray(mask, jnp.float32))
+
+    def stacked(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return self.buf, self.valid
+
+    def raw_relevance(self, *, forgetting_ratio: float, metric: str = "kl",
+                      backend: Optional[str] = None) -> jnp.ndarray:
+        """See ``ring_relevance`` (the shared Eq. 4/5 ring primitive)."""
+        return ring_relevance(self.buf, self.valid,
+                              forgetting_ratio=forgetting_ratio,
+                              metric=metric, backend=backend)
+
+
 @dataclasses.dataclass
 class RelevanceTracker:
     n_clients: int
@@ -80,14 +151,44 @@ class RelevanceTracker:
     backend: Optional[str] = None
 
     def __post_init__(self):
-        # history[c] = list of task features, most recent last
+        # history[c] = list of task features, most recent last (the oracle
+        # layout); the device ring mirrors it once push_all is used
         self.history: List[list] = [[] for _ in range(self.n_clients)]
+        self._ring: Optional[DeviceRingHistory] = None
+        self._ring_dirty = False   # host lists diverged (per-client push)
 
     def push(self, client: int, task_feature):
         h = self.history[client]
         h.append(np.asarray(task_feature, np.float32))
         if len(h) > self.history_len:
             h.pop(0)
+        self._ring_dirty = True
+
+    def push_all(self, feats, mask=None):
+        """Batched push: feats (C, D) for all clients at once, mask an
+        optional (C,) participation indicator. Updates the device-resident
+        ring with one roll/scatter AND the host lists (the loop oracle), so
+        ``relevance()`` no longer re-stacks from host every round."""
+        feats = np.asarray(feats, np.float32)
+        if mask is None:
+            mask = np.ones((self.n_clients,), np.float32)
+        mask = np.asarray(mask, np.float32)
+        if self._ring is None or self._ring_dirty:
+            # (re)build the ring from the oracle lists, then go resident
+            self._ring = DeviceRingHistory(self.n_clients, self.history_len,
+                                           feats.shape[-1])
+            stacked = self.stacked_history()
+            if stacked is not None:
+                self._ring.buf = jnp.asarray(stacked[0])
+                self._ring.valid = jnp.asarray(stacked[1])
+            self._ring_dirty = False
+        self._ring.push_all(feats, mask)
+        for c in range(self.n_clients):
+            if mask[c] > 0:
+                h = self.history[c]
+                h.append(feats[c].copy())
+                if len(h) > self.history_len:
+                    h.pop(0)
 
     def stacked_history(self) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         """Dense (C, k, D) age-major history (most recent at age 0) plus a
@@ -115,15 +216,18 @@ class RelevanceTracker:
 
     def _relevance_batched(self, backend: Optional[str]) -> np.ndarray:
         C, k = self.n_clients, self.history_len
-        stacked = self.stacked_history()
-        if stacked is None:
-            return np.zeros((C, C), np.float32)
-        dense, valid = stacked
+        if self._ring is not None and not self._ring_dirty:
+            # device-resident path: no host re-stack, one device program
+            dense, valid = self._ring.stacked()
+        else:
+            stacked = self.stacked_history()
+            if stacked is None:
+                return np.zeros((C, C), np.float32)
+            dense, valid = jnp.asarray(stacked[0]), jnp.asarray(stacked[1])
         cur = dense[:, 0]                     # each client's latest feature
         has_cur = valid[:, 0]                 # rows without history stay 0
         decay = self.forgetting_ratio ** np.arange(k, dtype=np.float32)
-        W = decayed_relevance(jnp.asarray(cur), jnp.asarray(dense),
-                              jnp.asarray(decay), jnp.asarray(valid),
+        W = decayed_relevance(cur, dense, jnp.asarray(decay), valid,
                               metric=self.metric, backend=backend)
         W = W * has_cur[:, None] * (1.0 - jnp.eye(C, dtype=jnp.float32))
         return normalize_rows(np.asarray(W))

@@ -9,12 +9,22 @@ A Strategy owns per-client state and defines three hooks:
 The simulation (repro/federated/simulation.py) drives C clients through the
 task stream, moving exactly the payloads each strategy declares — the comm
 log measures those payloads, reproducing the paper's S2C/C2S accounting.
+
+Strategies that set ``supports_stacked = True`` additionally implement the
+*stacked* engine API: all C clients' trainable pytrees, optimizer states,
+and loss extras live as ONE pytree whose leaves carry a leading (C, ...)
+dim (``StackedClientState``), per-client minibatches are pre-gathered on
+host into (C, epochs, B, D) arrays (drawing from ``self.rng`` in exactly
+the per-client order the host path uses, so both engines see identical
+batches), and local training for all C clients runs as a single
+``jax.vmap``-over-clients of a ``lax.scan`` over epochs — one jit dispatch
+per round instead of C×epochs.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,11 +41,39 @@ class ClientState:
     extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class StackedClientState:
+    """All C clients' states as one device-resident stacked pytree.
+
+    ``trainable`` / ``opt_state`` / ``extras`` leaves carry a leading C
+    dim; ``host`` keeps per-client objects that cannot live on device
+    (e.g. rehearsal memories) as plain length-C lists.
+    """
+
+    n_clients: int
+    trainable: Any
+    opt_state: Any
+    extras: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    host: Dict[str, List[Any]] = dataclasses.field(default_factory=dict)
+
+
+def _is_stackable(value) -> bool:
+    """True when every leaf of ``value`` is an array (device-stackable)."""
+    return all(isinstance(l, (jnp.ndarray, np.ndarray, jax.Array))
+               or np.isscalar(l) for l in jax.tree.leaves(value))
+
+
 class Strategy:
     """Base: plain local training (STL)."""
 
     name = "stl"
     uses_server = False
+    # opt-in to the device-resident engine (run_simulation(engine="stacked")):
+    # the generic machinery below handles any strategy whose loss/regularizer
+    # depend only on array-valued ``reg_*`` extras; strategies with
+    # non-batchable local steps (raw-image rehearsal, consolidation hooks,
+    # sparse uploads) keep the host engine.
+    supports_stacked = False
 
     def __init__(self, cfg: EM.EdgeModelConfig, *, lr=1e-3, weight_decay=1e-5,
                  epochs=5, batch=64, seed=0):
@@ -136,3 +174,140 @@ class Strategy:
     def storage_bytes(self, state: ClientState) -> int:
         from repro.common.pytree import tree_bytes
         return tree_bytes(state.theta)
+
+    # ---- stacked (device-resident) engine API --------------------------------
+    # One round = gather_round_batches (host rng, same draw order as the
+    # host engine) -> local_train_stacked (single jit: vmap over clients of
+    # a scan over epochs) -> server_round_stacked / apply_dispatch_stacked
+    # (device-resident server program). ``client_view`` materialises one
+    # client's slice for evaluation / storage accounting.
+
+    def stack_states(self, states: Dict[int, "ClientState"]) -> StackedClientState:
+        """Stack C per-client states into one (C, ...) pytree. Array-valued
+        extras are stacked on device; everything else (rehearsal memories,
+        host objects) moves to per-client ``host`` lists."""
+        from repro.common.pytree import tree_stack
+        C = len(states)
+        ordered = [states[c] for c in range(C)]
+        trainable = tree_stack([s.theta for s in ordered])
+        opt_state = jax.vmap(self.opt.init)(trainable)
+        extras: Dict[str, Any] = {}
+        host: Dict[str, List[Any]] = {}
+        for k in ordered[0].extras:
+            vals = [s.extras[k] for s in ordered]
+            if _is_stackable(vals[0]):
+                extras[k] = tree_stack(vals)
+            else:
+                host[k] = vals
+        return StackedClientState(n_clients=C, trainable=trainable,
+                                  opt_state=opt_state, extras=extras,
+                                  host=host)
+
+    def client_view(self, stacked: StackedClientState, c: int) -> ClientState:
+        """Client c's slice of the stacked state (for eval / storage)."""
+        from repro.common.pytree import tree_slice
+        ex = {k: tree_slice(v, c) for k, v in stacked.extras.items()}
+        for k, vals in stacked.host.items():
+            ex[k] = vals[c]
+        return ClientState(theta=tree_slice(stacked.trainable, c),
+                           opt_state=None, extras=ex)
+
+    def _gather_rehearsal(self, stacked: StackedClientState, c: int):
+        """Per-client rehearsal pool for this round (None = no rehearsal).
+        Called once per client, first in the per-client rng draw order —
+        exactly where the host path calls ``memory.sample``."""
+        return None
+
+    def gather_round_batches(self, stacked: StackedClientState,
+                             protos_list, labels_list):
+        """Pre-gather every client's epoch minibatches as dense arrays:
+        (C, epochs, B, D) prototypes + (C, epochs, B) labels.
+
+        Draws from ``self.rng`` in the host engine's exact order (client-
+        major, then epoch; rehearsal pool first, then per-epoch batch and
+        rehearsal indices) so both engines train on identical batches.
+        """
+        C = len(protos_list)
+        bxs, bys = [], []
+        for c in range(C):
+            p, l = protos_list[c], labels_list[c]
+            n = len(p)
+            reh = self._gather_rehearsal(stacked, c)
+            ex, ey = [], []
+            for _ in range(self.epochs):
+                idx = self.rng.choice(n, size=min(self.batch, n),
+                                      replace=n < self.batch)
+                px, py = p[idx], l[idx]
+                if reh is not None:
+                    rx, ry = reh
+                    ridx = self.rng.choice(len(rx), size=self.batch // 2,
+                                           replace=True)
+                    px = np.concatenate([px, rx[ridx]])
+                    py = np.concatenate([py, ry[ridx]])
+                ex.append(px)
+                ey.append(py)
+            bxs.append(np.stack(ex))
+            bys.append(np.stack(ey))
+        shapes = {b.shape for b in bxs}
+        if len(shapes) > 1:
+            raise ValueError(
+                f"stacked engine needs uniform per-client batch shapes, "
+                f"got {sorted(shapes)} (ragged tasks/rehearsal pools)")
+        return jnp.asarray(np.stack(bxs)), jnp.asarray(np.stack(bys))
+
+    def _stacked_loss_extras(self, stacked: StackedClientState):
+        ex = {k: v for k, v in stacked.extras.items() if k.startswith("reg_")}
+        return ex if ex else {"reg_dummy": jnp.zeros((stacked.n_clients,))}
+
+    def _stacked_train_fn(self):
+        """One jit: vmap over clients of a lax.scan over pre-gathered epoch
+        batches — replaces C×epochs per-client jit dispatches per round."""
+        if "stacked_train" not in self._jit_cache:
+            @jax.jit
+            def run(trainable, opt_state, extras, bx, by):
+                def one_client(tr, os, ex, px, py):
+                    def estep(carry, batch):
+                        tr, os = carry
+                        x, y = batch
+
+                        def lf(th):
+                            return (self.loss(th, x, y, ex)
+                                    + self.regularizer(th, ex))
+                        loss, grads = jax.value_and_grad(lf)(tr)
+                        grads, _ = clip_by_global_norm(grads, 1.0)
+                        updates, os = self.opt.update(grads, os, tr)
+                        return (apply_updates(tr, updates), os), loss
+                    (tr, os), losses = jax.lax.scan(estep, (tr, os), (px, py))
+                    return tr, os, losses[-1]
+                return jax.vmap(one_client)(trainable, opt_state, extras,
+                                            bx, by)
+            self._jit_cache["stacked_train"] = run
+        return self._jit_cache["stacked_train"]
+
+    def local_train_stacked(self, stacked: StackedClientState, bx, by,
+                            protos_list, labels_list, rnd: int):
+        """Train all C clients in one device program. Returns
+        (stacked state, stacked upload pytree or None)."""
+        run = self._stacked_train_fn()
+        extras = self._stacked_loss_extras(stacked)
+        trainable, opt_state, _ = run(stacked.trainable, stacked.opt_state,
+                                      extras, bx, by)
+        stacked.trainable = trainable
+        stacked.opt_state = opt_state
+        return stacked, None
+
+    def server_round_stacked(self, rnd: int, upload):
+        """Device-resident server round over the stacked upload."""
+        return None
+
+    def apply_dispatch_stacked(self, stacked: StackedClientState, dispatch):
+        return stacked
+
+    def stacked_upload_bytes(self, upload, n_clients: int) -> int:
+        """Per-client C2S bytes (stacked leaves carry C copies)."""
+        from repro.common.pytree import tree_bytes
+        return tree_bytes(upload) // max(n_clients, 1)
+
+    def stacked_dispatch_bytes(self, dispatch, n_clients: int) -> int:
+        from repro.common.pytree import tree_bytes
+        return tree_bytes(dispatch) // max(n_clients, 1)

@@ -5,6 +5,27 @@ C edge clients × T sequential tasks × R communication rounds
 6 tasks). Each round: extract prototypes → local train → upload → server
 integration → dispatch → periodic retrieval evaluation (mAP/CMC, Eq. 7) and
 forgetting (Eq. 8), plus exact S2C/C2S byte accounting.
+
+Two interchangeable engines drive the rounds:
+
+  * ``engine="host"`` (default) — the original per-client Python loop: one
+    jit dispatch per client per epoch, per-client state dicts, the server
+    round over host lists of pytrees. Works for every strategy and is the
+    allclose oracle for the stacked engine.
+  * ``engine="stacked"`` — device-resident rounds for strategies that set
+    ``supports_stacked`` (FedSTIL, STL): all C client states live as one
+    stacked (C, ...) pytree, per-client minibatches are pre-gathered into
+    (C, epochs, B, D) arrays (same rng draw order as the host engine, so
+    both engines train on identical batches), local training for all C
+    clients is a single vmap-over-clients of a scan-over-epochs, and the
+    FedSTIL server round runs as one fused device program over a resident
+    (C, k, D) relevance ring buffer. Metrics match the host engine to
+    float tolerance; per-round wall time scales to C ≫ 100
+    (``benchmarks/run.py --bench server`` tracks the ratio).
+
+Strategies that need raw images (iCaRL) or non-batchable local steps
+(EWC/MAS consolidation, FedWeIT sparse uploads) simply keep the default
+host engine.
 """
 from __future__ import annotations
 
@@ -40,9 +61,71 @@ class SimulationResult:
         return self.rounds[-1] if self.rounds else {}
 
 
+def _pre_extract_prototypes(bench: FederatedReIDBenchmark, g_params):
+    """Extraction layers are frozen, so every task's train/query prototypes
+    are computed up front — as ONE vmapped ``extract_prototypes`` call over
+    the stacked (C·T, N, img_dim) array when task shapes are uniform (the
+    benchmark default), falling back to per-task calls on ragged shapes."""
+    C, T = bench.n_clients, bench.n_tasks
+    tasks = [bench.task(c, t) for c in range(C) for t in range(T)]
+    shapes = {(task.train_x.shape, task.query_x.shape) for task in tasks}
+    protos = {}
+    if len(shapes) == 1:
+        n_train = tasks[0].train_x.shape[0]
+        stacked = np.stack([np.concatenate([task.train_x, task.query_x])
+                            for task in tasks])
+        out = np.asarray(jax.vmap(
+            lambda x: EM.extract_prototypes(g_params, x))(stacked))
+        for i, task in enumerate(tasks):
+            protos[(task.client, task.round)] = (
+                out[i, :n_train], task.train_y,
+                out[i, n_train:], task.query_y)
+    else:
+        for task in tasks:
+            protos[(task.client, task.round)] = (
+                np.asarray(EM.extract_prototypes(g_params, task.train_x)),
+                task.train_y,
+                np.asarray(EM.extract_prototypes(g_params, task.query_x)),
+                task.query_y,
+            )
+    return protos
+
+
+def _eval_round(strategy, get_state, bench, g_params, protos, tracker,
+                rnd, t):
+    """Shared eval block (Eq. 7/8): per-client retrieval over all trained
+    tasks. ``get_state(c)`` yields a ClientState-like view for client c."""
+    per_round = {"round": rnd}
+    for c in range(bench.n_clients):
+        state = get_state(c)
+        gal_x, gal_y = bench.gallery(c, t)
+        gal_p = np.asarray(EM.extract_prototypes(g_params, gal_x))
+        gal_f = strategy.features(state, gal_p)
+        for tt in range(t + 1):
+            _, _, qx, qy = protos[(c, tt)]
+            qf = strategy.features(state, qx)
+            m = evaluate_retrieval(qf, qy, gal_f, gal_y)
+            tracker.record(c, tt, rnd, m)
+    per_round["mAP"] = tracker.mean_accuracy(rnd, "mAP")
+    per_round["R1"] = tracker.mean_accuracy(rnd, "R1")
+    per_round["R3"] = tracker.mean_accuracy(rnd, "R3")
+    per_round["R5"] = tracker.mean_accuracy(rnd, "R5")
+    per_round["forgetting_mAP"] = tracker.mean_forgetting(rnd, "mAP")
+    per_round["forgetting_R1"] = tracker.mean_forgetting(rnd, "R1")
+    return per_round
+
+
 def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                    *, rounds: int = 12, eval_every: int = 2,
-                   seed: int = 0, verbose: bool = False) -> SimulationResult:
+                   seed: int = 0, verbose: bool = False,
+                   engine: str = "host") -> SimulationResult:
+    if engine not in ("host", "stacked"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "stacked" and not strategy.supports_stacked:
+        raise ValueError(
+            f"strategy {strategy.name!r} does not implement the stacked "
+            f"engine API; use engine='host'")
+
     C, T = bench.n_clients, bench.n_tasks
     rounds_per_task = max(1, rounds // T)
     key = jax.random.PRNGKey(seed)
@@ -57,17 +140,52 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
     eval_rounds: List[Dict[str, float]] = []
     server_s = 0.0
 
-    # pre-extract prototypes for every task (extraction layers are frozen)
-    protos = {}
-    for c in range(C):
-        for t in range(T):
-            task = bench.task(c, t)
-            protos[(c, t)] = (
-                np.asarray(EM.extract_prototypes(g_params, task.train_x)),
-                task.train_y,
-                np.asarray(EM.extract_prototypes(g_params, task.query_x)),
-                task.query_y,
-            )
+    protos = _pre_extract_prototypes(bench, g_params)
+
+    if engine == "stacked":
+        stacked = strategy.stack_states(states)
+        for rnd in range(rounds):
+            t = min(rnd // rounds_per_task, T - 1)
+            protos_list = [protos[(c, t)][0] for c in range(C)]
+            labels_list = [protos[(c, t)][1] for c in range(C)]
+            bx, by = strategy.gather_round_batches(stacked, protos_list,
+                                                   labels_list)
+            stacked, upload = strategy.local_train_stacked(
+                stacked, bx, by, protos_list, labels_list, rnd)
+            if upload is not None:
+                per_client = strategy.stacked_upload_bytes(upload, C)
+                for _ in range(C):
+                    comm.log_c2s(rnd, per_client)
+
+            if strategy.uses_server and upload is not None:
+                t0 = time.perf_counter()
+                dispatch = strategy.server_round_stacked(rnd, upload)
+                server_s += time.perf_counter() - t0
+                if dispatch is not None:
+                    per_client = strategy.stacked_dispatch_bytes(dispatch, C)
+                    nz = np.asarray(dispatch["nz"]) if "nz" in dispatch \
+                        else np.ones((C,), bool)
+                    for c in range(C):
+                        if nz[c]:
+                            comm.log_s2c(rnd, per_client)
+                    stacked = strategy.apply_dispatch_stacked(stacked,
+                                                              dispatch)
+
+            if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
+                per_round = _eval_round(
+                    strategy, lambda c: strategy.client_view(stacked, c),
+                    bench, g_params, protos, tracker, rnd, t)
+                eval_rounds.append(per_round)
+                if verbose:
+                    print(f"  [{strategy.name}/stacked] round {rnd}: "
+                          f"mAP={per_round['mAP']:.4f} "
+                          f"R1={per_round['R1']:.4f} "
+                          f"F={per_round['forgetting_mAP']:.4f}")
+
+        storage = max(strategy.storage_bytes(strategy.client_view(stacked, c))
+                      for c in range(C))
+        return SimulationResult(strategy.name, tracker, comm, storage,
+                                eval_rounds, server_time_s=server_s)
 
     accepts_raw = "raw_images" in inspect.signature(strategy.local_train).parameters
 
@@ -101,24 +219,8 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                     states[c] = strategy.apply_dispatch(states[c], d)
 
         if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
-            per_round = {"round": rnd}
-            accs = []
-            for c in range(C):
-                gal_x, gal_y = bench.gallery(c, t)
-                gal_p = np.asarray(EM.extract_prototypes(g_params, gal_x))
-                gal_f = strategy.features(states[c], gal_p)
-                for tt in range(t + 1):
-                    _, _, qx, qy = protos[(c, tt)]
-                    qf = strategy.features(states[c], qx)
-                    m = evaluate_retrieval(qf, qy, gal_f, gal_y)
-                    tracker.record(c, tt, rnd, m)
-                accs.append(tracker.accuracy(c, rnd))
-            per_round["mAP"] = tracker.mean_accuracy(rnd, "mAP")
-            per_round["R1"] = tracker.mean_accuracy(rnd, "R1")
-            per_round["R3"] = tracker.mean_accuracy(rnd, "R3")
-            per_round["R5"] = tracker.mean_accuracy(rnd, "R5")
-            per_round["forgetting_mAP"] = tracker.mean_forgetting(rnd, "mAP")
-            per_round["forgetting_R1"] = tracker.mean_forgetting(rnd, "R1")
+            per_round = _eval_round(strategy, lambda c: states[c], bench,
+                                    g_params, protos, tracker, rnd, t)
             eval_rounds.append(per_round)
             if verbose:
                 print(f"  [{strategy.name}] round {rnd}: "

@@ -19,6 +19,8 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kl_similarity import kl_similarity as _kl
 from repro.kernels.pairwise_dist import pairwise_dist as _pdist
 from repro.kernels.relevance_aggregate import relevance_aggregate as _agg
+from repro.kernels.relevance_aggregate import \
+    fused_relevance_aggregate as _fused_agg
 
 DEFAULT_BACKEND = "auto"
 
@@ -62,6 +64,15 @@ def relevance_aggregate(w, thetas, *, backend: str = None):
     if b == "ref":
         return REF.relevance_aggregate_ref(w, thetas)
     return _agg(w, thetas, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def fused_relevance_aggregate(w, thetas, *, backend: str = None):
+    """Diag-mask + row-normalize + W @ Θ in one program -> (B, Wn)."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.fused_relevance_aggregate_ref(w, thetas)
+    return _fused_agg(w, thetas, interpret=(b == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

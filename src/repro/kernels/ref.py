@@ -42,6 +42,24 @@ def relevance_aggregate_ref(w, thetas):
     return (w.astype(jnp.float32) @ thetas.astype(jnp.float32)).astype(thetas.dtype)
 
 
+def fused_relevance_aggregate_ref(w, thetas):
+    """Fused FedSTIL server math (Eq. 5 post-processing + Eq. 6):
+
+        Wm = w ⊙ (1 - I)                 (no self-relevance)
+        Wn = Wm / rowsum(Wm)             (zero rows stay zero)
+        B  = Wn @ thetas                 (fp32 accumulate)
+
+    w: (C, C) *raw* decayed relevance (diagonal may hold junk);
+    thetas: (C, P). Returns (B: (C, P) in thetas.dtype, Wn: (C, C) fp32).
+    """
+    C = w.shape[0]
+    wm = w.astype(jnp.float32) * (1.0 - jnp.eye(C, dtype=jnp.float32))
+    rows = jnp.sum(wm, axis=1, keepdims=True)
+    wn = jnp.where(rows > 0, wm / jnp.where(rows > 0, rows, 1.0), 0.0)
+    b = (wn @ thetas.astype(jnp.float32)).astype(thetas.dtype)
+    return b, wn
+
+
 def kl_similarity_ref(a, b):
     """exp(-KL(softmax(a_i) || softmax(b_j))): (N,D) x (M,D) -> (N,M)."""
     p = jax.nn.softmax(a.astype(jnp.float32), -1)

@@ -52,3 +52,62 @@ def relevance_aggregate(w, thetas, *, p_block: int = P_BLOCK,
         interpret=interpret,
     )(w, tp)
     return out[:, :Pn]
+
+
+def _normalized_w(w):
+    """Diagonal-masked, row-normalized relevance; all-zero rows stay zero.
+
+    Runs inside the kernel on the full (C, C) block — C is the client
+    count, tiny next to P, so recomputing it per grid step is free and
+    keeps the whole Eq. 5→6 post-processing in VMEM.
+    """
+    C = w.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    wm = jnp.where(row == col, 0.0, w.astype(jnp.float32))
+    rows = jnp.sum(wm, axis=1, keepdims=True)
+    return jnp.where(rows > 0, wm / jnp.where(rows > 0, rows, 1.0), 0.0)
+
+
+def _fused_kernel(w_ref, t_ref, o_ref, wn_ref):
+    wn = _normalized_w(w_ref[...])                  # (C, C) fp32
+    t = t_ref[...].astype(jnp.float32)              # (C, pb)
+    o_ref[...] = jax.lax.dot_general(
+        wn, t, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    wn_ref[...] = wn                                # idempotent per grid step
+
+
+def fused_relevance_aggregate(w, thetas, *, p_block: int = P_BLOCK,
+                              interpret: Optional[bool] = None):
+    """One fused device program for the server round's Eq. 5→6 tail:
+    diagonal masking, row normalization (zero-row safe), and B = Wn @ Θ.
+
+    w: (C, C) raw decayed relevance (diagonal ignored); thetas: (C, P).
+    Returns (B: (C, P), Wn: (C, C) fp32 normalized relevance).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    C, Pn = thetas.shape
+    p_block = min(p_block, max(128, Pn))
+    Pp = (Pn + p_block - 1) // p_block * p_block
+    tp = jnp.pad(thetas, ((0, 0), (0, Pp - Pn)))
+
+    out, wn = pl.pallas_call(
+        _fused_kernel,
+        grid=(Pp // p_block,),
+        in_specs=[
+            pl.BlockSpec((C, C), lambda i: (0, 0)),
+            pl.BlockSpec((C, p_block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((C, p_block), lambda i: (0, i)),
+            pl.BlockSpec((C, C), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, Pp), thetas.dtype),
+            jax.ShapeDtypeStruct((C, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w, tp)
+    return out[:, :Pn], wn

@@ -21,6 +21,8 @@ from repro.federated.base import ClientState, Strategy
 
 class STL(Strategy):
     name = "stl"
+    # pure local minibatch training — batches cleanly over clients
+    supports_stacked = True
 
 
 class EWC(Strategy):

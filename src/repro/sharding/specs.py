@@ -132,8 +132,27 @@ def tree_param_specs(cfg: ModelConfig, tree, **kw):
 
 
 # ---------------------------------------------------------------------------
-# batch / cache specs
+# federated server: stacked (C, P) aggregate specs
 # ---------------------------------------------------------------------------
+
+
+def stacked_aggregate_specs(*, client_axis: str = "data",
+                            param_axis: Optional[str] = "model"):
+    """PartitionSpecs for the fused server aggregate B = Wn @ Θ at C ≫ 100.
+
+    Θ (C, P) shards its client rows over ``client_axis`` (each device holds
+    a client block resident between rounds) and optionally its parameter
+    columns over ``param_axis``; W (C, C) shards its *columns* over the
+    client axis to line up with Θ's contracted dim, so GSPMD lowers the
+    matmul to per-device partial products + one reduce over the client
+    axis. The (C, C) normalized-relevance output is tiny and replicated.
+    """
+    return {
+        "w": P(None, client_axis),
+        "thetas": P(client_axis, param_axis),
+        "out": P(None, param_axis),
+        "wn": P(None, None),
+    }
 
 
 def batch_axes(global_batch: int, dp: int, multi_pod: bool):
