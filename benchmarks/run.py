@@ -2,8 +2,10 @@
 
 ``python -m benchmarks.run [--only tableN]`` prints each table plus
 ``name,us_per_call,derived`` CSV rows. ``--bench server`` runs the
-host-vs-stacked server-round sweep and writes ``BENCH_server_round.json``
-(the machine-readable perf trajectory future PRs regress against).
+host-vs-stacked server-round sweep (``BENCH_server_round.json``);
+``--bench eval`` runs the host-vs-batched eval-round sweep
+(``BENCH_eval_round.json``) — the machine-readable perf trajectories
+future PRs regress against.
 """
 import argparse
 import sys
@@ -14,13 +16,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table2|table3|table4|table5|table6|fig6|fig8|kernels")
-    ap.add_argument("--bench", default=None, choices=["server"],
+    ap.add_argument("--bench", default=None, choices=["server", "eval"],
                     help="perf-trajectory benches (JSON output)")
     args = ap.parse_args()
 
     if args.bench == "server":
         from benchmarks.server_round import main as server_main
         server_main()
+        if args.only is None:
+            return
+    if args.bench == "eval":
+        from benchmarks.eval_round import bench_eval_round
+        bench_eval_round()
         if args.only is None:
             return
 

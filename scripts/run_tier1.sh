@@ -5,8 +5,9 @@
 #
 # Usage: scripts/run_tier1.sh [--smoke] [pytest args...]
 #   --smoke  additionally exercise the device-resident path end-to-end:
-#            a 2-round FedSTIL simulation on engine="stacked" and the
-#            `--only relevance` kernel-bench sweep.
+#            a 2-round FedSTIL simulation on engine="stacked", the
+#            `--only relevance` kernel-bench sweep, and a 1-eval smoke of
+#            the batched eval-round bench (device vs host-loop parity).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -42,4 +43,7 @@ EOF
     echo "=== smoke: relevance bench sweep ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.kernels_bench --only relevance
+    echo "=== smoke: batched eval round (device vs host loop) ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.eval_round --smoke
 fi

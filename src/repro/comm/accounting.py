@@ -23,6 +23,16 @@ class CommLog:
     def log_s2c(self, rnd: int, payload):
         self.s2c[rnd] += tree_bytes(payload) if not isinstance(payload, int) else payload
 
+    # batched logging: the stacked engine moves C identical-size payloads
+    # per round — one accounting call instead of a per-client Python loop
+    def log_c2s_many(self, rnd: int, payload, n: int):
+        self.c2s[rnd] += n * (tree_bytes(payload)
+                              if not isinstance(payload, int) else payload)
+
+    def log_s2c_many(self, rnd: int, payload, n: int):
+        self.s2c[rnd] += n * (tree_bytes(payload)
+                              if not isinstance(payload, int) else payload)
+
     @property
     def total_c2s(self) -> int:
         return sum(self.c2s.values())

@@ -65,16 +65,26 @@ def init_adaptive_layers(key, cfg: EdgeModelConfig):
     }
 
 
-def adaptive_forward(theta, protos):
-    """prototypes -> (retrieval features, class logits)."""
+def adaptive_forward_masked(theta, protos, mask):
+    """prototypes -> (retrieval features, class logits) over a padded
+    batch: the BN-style statistics (paper adds BN after the representation)
+    are computed over ``mask``-valid rows only, so zero-padded rows
+    contribute nothing. protos: (N, D); mask: (N,) 1.0 = valid."""
     h = jax.nn.relu(protos @ theta["l1"]["w"] + theta["l1"]["b"])
     f = h @ theta["l2"]["w"] + theta["l2"]["b"]
-    # batch-norm-like standardisation (paper adds BN after representation)
-    mu = jnp.mean(f, 0, keepdims=True)
-    sd = jnp.std(f, 0, keepdims=True) + 1e-5
+    m = mask.astype(f.dtype)[:, None]
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mu = jnp.sum(f * m, 0, keepdims=True) / n
+    sd = jnp.sqrt(jnp.sum(jnp.square(f - mu) * m, 0, keepdims=True) / n) + 1e-5
     fn = (f - mu) / sd * theta["bn"]["scale"] + theta["bn"]["bias"]
     logits = fn @ theta["head"]["w"]
     return fn, logits
+
+
+def adaptive_forward(theta, protos):
+    """prototypes -> (retrieval features, class logits)."""
+    return adaptive_forward_masked(
+        theta, protos, jnp.ones((protos.shape[0],), jnp.float32))
 
 
 def ce_loss(theta, protos, labels):

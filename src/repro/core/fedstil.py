@@ -85,6 +85,11 @@ class FedSTIL(Strategy):
     def _eval_theta(self, state):
         return self.make_theta(state.theta, state.extras)
 
+    def eval_theta_stacked(self, stacked):
+        # theta = B ⊙ alpha + A leaf-wise: the stacked C dim passes through
+        return combine(stacked.extras["reg_B"], stacked.trainable["alpha"],
+                       stacked.trainable["A"])
+
     # ---- local round ---------------------------------------------------------
     def local_train(self, client, state, protos, labels, rnd, **_):
         rehearsal = None

@@ -116,12 +116,18 @@ class FederatedReIDBenchmark:
     def gallery(self, exclude_client: int, upto_task: int):
         """Cross-camera gallery: other clients' query splits, tasks <= t."""
         xs, ys = [], []
-        for (c, t), task in self._tasks.items():
-            if c == exclude_client or t > upto_task:
-                continue
+        for c, t in self.gallery_members(exclude_client, upto_task):
+            task = self._tasks[(c, t)]
             xs.append(task.query_x)
             ys.append(task.query_y)
         return np.concatenate(xs), np.concatenate(ys)
+
+    def gallery_members(self, exclude_client: int, upto_task: int):
+        """The (client, task) keys whose query splits make up ``gallery``,
+        in gallery concatenation order — lets callers assemble gallery
+        prototypes from already-extracted per-task prototypes."""
+        return [(c, t) for (c, t) in self._tasks
+                if c != exclude_client and t <= upto_task]
 
     @property
     def n_classes(self) -> int:

@@ -1,3 +1,7 @@
+from repro.evalreid.batched import (
+    batched_retrieval_metrics,
+    evaluate_retrieval_batched,
+)
 from repro.evalreid.retrieval import (
     distance_matrix,
     evaluate_retrieval,

@@ -1,8 +1,11 @@
 """Person ReID retrieval evaluation: mAP and CMC (rank-k accuracy).
 
 Query features are matched against a cross-camera gallery by euclidean
-distance over L2-normalised features (the distance matrix is the
-kernels/pairwise_dist.py hot spot at production scale).
+distance over L2-normalised features. This numpy path is the per-(client,
+task) allclose oracle; production eval runs all (C clients x T tasks)
+query sets through ``evalreid.batched.evaluate_retrieval_batched``, whose
+distance matrices go through the ``kernels/pairwise_dist`` Pallas kernel
+(``kernels.ops.batched_pairwise_dist``).
 """
 from __future__ import annotations
 
@@ -30,7 +33,9 @@ def evaluate_retrieval(query_feats, query_ids, gallery_feats, gallery_ids,
     dist = distance_matrix(query_feats, gallery_feats)
     gids = np.asarray(gallery_ids)
     qids = np.asarray(query_ids)
-    order = np.argsort(dist, axis=1)
+    # stable sort: deterministic tie order, and the same order the batched
+    # device path produces (jnp.argsort is stable)
+    order = np.argsort(dist, axis=1, kind="stable")
     matches = gids[order] == qids[:, None]          # (Q, G) sorted by rank
 
     valid = matches.any(axis=1)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import edge_model as EM
+from repro.evalreid.batched import batched_retrieval_metrics
 from repro.train.optimizer import adam, apply_updates, clip_by_global_norm
 
 
@@ -61,6 +62,37 @@ def _is_stackable(value) -> bool:
     """True when every leaf of ``value`` is an array (device-stackable)."""
     return all(isinstance(l, (jnp.ndarray, np.ndarray, jax.Array))
                or np.isscalar(l) for l in jax.tree.leaves(value))
+
+
+def stacked_eval_program(theta, qp, qids, task_mask, gp, gids, gmask, *,
+                         ranks=(1, 3, 5), kernel_backend=None,
+                         max_matches=None):
+    """One traceable retrieval-eval round for all C clients x T tasks.
+
+    theta: stacked eval-time adaptive pytree (leaves (C, ...));
+    qp: (C, T, Q, D) query prototypes — ALL tasks' sets, including ones
+    not yet trained (their rows hold real data; they are excluded via
+    ``task_mask``, which sentinels their query ids to -2 so they can
+    never match); qids: (C, T, Q); task_mask: (C, T) 1.0 = trained task;
+    gp: (C, G, D) gallery prototypes padded to a common G; gids: (C, G);
+    gmask: (C, G) gallery validity.
+
+    The per-client feature heads are vmapped over the stacked pytree —
+    gallery features use the masked BN variant (per-client gallery
+    statistics over valid rows only), each (c, t) query set gets its own
+    BN batch exactly like the per-client host path. Returns the
+    ``batched_retrieval_metrics`` dict of (C, T) arrays.
+    """
+    gal_f = jax.vmap(
+        lambda th, p, m: EM.adaptive_forward_masked(th, p, m)[0])(
+            theta, gp, gmask)
+    qf = jax.vmap(lambda th, sets: jax.vmap(
+        lambda p: EM.adaptive_forward(th, p)[0])(sets))(theta, qp)
+    qids_eff = jnp.where(task_mask[:, :, None] > 0,
+                         qids.astype(jnp.int32), -2)
+    return batched_retrieval_metrics(qf, qids_eff, gal_f, gids, gmask=gmask,
+                                     ranks=ranks, backend=kernel_backend,
+                                     max_matches=max_matches)
 
 
 class Strategy:
@@ -170,6 +202,32 @@ class Strategy:
 
     def _eval_theta(self, state: ClientState):
         return state.theta
+
+    # ---- batched (device-resident) evaluation --------------------------------
+    def stack_eval_thetas(self, states: Dict[int, "ClientState"]):
+        """All C clients' eval-time adaptive params as one (C, ...) pytree
+        (host-engine entry to the batched eval program)."""
+        from repro.common.pytree import tree_stack
+        return tree_stack([self._eval_theta(states[c])
+                           for c in range(len(states))])
+
+    def eval_theta_stacked(self, stacked: StackedClientState):
+        """Stacked-engine counterpart of ``_eval_theta``: the (C, ...)
+        eval-time params, straight off the resident state (no unstack)."""
+        return stacked.trainable
+
+    def eval_round_stacked(self, theta, qp, qids, task_mask, gp, gids, gmask,
+                           *, ranks=(1, 3, 5), kernel_backend=None,
+                           max_matches=None):
+        """All C x T retrieval evaluations as one jitted device program
+        (feature heads + Pallas distance kernel + mAP/CMC)."""
+        key = f"eval:{tuple(ranks)}:{kernel_backend}:{max_matches}"
+        if key not in self._jit_cache:
+            self._jit_cache[key] = jax.jit(functools.partial(
+                stacked_eval_program, ranks=tuple(ranks),
+                kernel_backend=kernel_backend, max_matches=max_matches))
+        return self._jit_cache[key](theta, qp, qids, task_mask, gp, gids,
+                                    gmask)
 
     def storage_bytes(self, state: ClientState) -> int:
         from repro.common.pytree import tree_bytes

@@ -6,6 +6,17 @@ C edge clients × T sequential tasks × R communication rounds
 integration → dispatch → periodic retrieval evaluation (mAP/CMC, Eq. 7) and
 forgetting (Eq. 8), plus exact S2C/C2S byte accounting.
 
+Evaluation (``eval_backend="device"``, the default) is itself batched: all
+(client, task) query sets live as padded/masked (C, T, Q, D) device arrays,
+gallery prototypes are assembled once per (c, t) from the pre-extracted
+query prototypes (the extraction layers are frozen, so they never change)
+and padded to a common G, and one jitted program per eval round runs every
+client's feature head (vmapped over the stacked eval pytree), all distance
+matrices (kernels/pairwise_dist), and mAP/CMC + the per-(c, t) forgetting
+bookkeeping inputs on device. ``eval_backend="host"`` retains the original
+per-(client, task) numpy loop as the allclose oracle (and the fallback for
+ragged benchmarks that cannot be stacked).
+
 Two interchangeable engines drive the rounds:
 
   * ``engine="host"`` (default) — the original per-client Python loop: one
@@ -32,9 +43,10 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.comm.accounting import CommLog
@@ -43,6 +55,8 @@ from repro.data.synthetic import FederatedReIDBenchmark
 from repro.evalreid import evaluate_retrieval
 from repro.federated.base import Strategy
 from repro.train.metrics import LifelongTracker
+
+EVAL_RANKS = (1, 3, 5)
 
 
 @dataclasses.dataclass
@@ -91,36 +105,148 @@ def _pre_extract_prototypes(bench: FederatedReIDBenchmark, g_params):
     return protos
 
 
-def _eval_round(strategy, get_state, bench, g_params, protos, tracker,
-                rnd, t):
-    """Shared eval block (Eq. 7/8): per-client retrieval over all trained
-    tasks. ``get_state(c)`` yields a ClientState-like view for client c."""
+class _EvalCache:
+    """Eval-round inputs, built once per simulation and reused every round.
+
+    Galleries never change (the extraction layers are frozen and the
+    gallery is the other clients' fixed query splits), so their prototypes
+    are assembled per (c, t) from the pre-extracted query prototypes —
+    never re-extracted per eval round. On top of that, when task shapes
+    are uniform (the benchmark default) the query sets are stacked into
+    device-resident padded (C, T, Q, D) arrays and the per-t galleries
+    into (C, G_max, D) + validity masks (padded to the t = T-1 gallery
+    size, so the jitted device eval program compiles exactly once per
+    simulation). Galleries for past tasks are evicted as t advances —
+    the task stream is monotone, they are never needed again.
+    """
+
+    def __init__(self, bench: FederatedReIDBenchmark, protos,
+                 device: bool = True):
+        self.bench = bench
+        self.protos = protos
+        C, T = bench.n_clients, bench.n_tasks
+        qshapes = {protos[(c, t)][2].shape for c in range(C) for t in range(T)}
+        self.uniform = len(qshapes) == 1
+        # device stacks are only built when the device path will run them
+        # (uniform shapes AND the caller asked for device eval)
+        self.device_ready = device and self.uniform
+        self._host_gal: Dict[Tuple[int, int], Tuple] = {}
+        self._dev_t: Optional[int] = None
+        self._dev_gal = None
+        if self.device_ready:
+            self.qp = jnp.asarray(np.stack(
+                [np.stack([protos[(c, t)][2] for t in range(T)])
+                 for c in range(C)]).astype(np.float32))        # (C, T, Q, D)
+            self.qids = jnp.asarray(np.stack(
+                [np.stack([protos[(c, t)][3] for t in range(T)])
+                 for c in range(C)]).astype(np.int32))          # (C, T, Q)
+            self.g_max = sum(protos[k][2].shape[0]
+                             for k in bench.gallery_members(0, T - 1))
+            # static per-query match bound for the counting-based ranking,
+            # computed once against the LARGEST (t = T-1) galleries — valid
+            # for every earlier t (galleries only shrink)
+            from repro.evalreid.batched import max_match_bound
+            self.max_matches = max(
+                max_match_bound(
+                    np.asarray(self.qids[c])[None],
+                    np.concatenate([protos[k][3] for k in
+                                    bench.gallery_members(c, T - 1)])[None])
+                for c in range(C))
+
+    def host_gallery(self, c: int, t: int):
+        """(gallery prototypes, gallery ids) for client c at task t —
+        computed once per (c, t) from the pre-extracted query prototypes."""
+        key = (c, t)
+        if key not in self._host_gal:
+            if self._host_gal and next(iter(self._host_gal))[1] != t:
+                self._host_gal.clear()       # t is monotone: evict old tasks
+            members = self.bench.gallery_members(c, t)
+            self._host_gal[key] = (
+                np.concatenate([self.protos[k][2] for k in members]),
+                np.concatenate([self.protos[k][3] for k in members]))
+        return self._host_gal[key]
+
+    def device_gallery(self, t: int):
+        """Stacked (C, G_max, D) gallery prototypes + (C, G_max) ids and
+        validity mask for task t (None when the device stacks were not
+        built — ragged benchmark or host-only eval)."""
+        if not self.device_ready:
+            return None
+        if self._dev_t != t:
+            C = self.bench.n_clients
+            D = self.qp.shape[-1]
+            gp = np.zeros((C, self.g_max, D), np.float32)
+            gids = np.full((C, self.g_max), -1, np.int32)
+            gmask = np.zeros((C, self.g_max), np.float32)
+            for c in range(C):
+                p, y = self.host_gallery(c, t)
+                gp[c, :len(p)] = p
+                gids[c, :len(y)] = y
+                gmask[c, :len(p)] = 1.0
+            self._dev_t = t
+            self._dev_gal = (jnp.asarray(gp), jnp.asarray(gids),
+                             jnp.asarray(gmask))
+        return self._dev_gal
+
+    def task_mask(self, t: int):
+        C, T = self.bench.n_clients, self.bench.n_tasks
+        m = np.zeros((C, T), np.float32)
+        m[:, :t + 1] = 1.0
+        return jnp.asarray(m)
+
+
+def _round_summary(tracker, rnd):
     per_round = {"round": rnd}
-    for c in range(bench.n_clients):
-        state = get_state(c)
-        gal_x, gal_y = bench.gallery(c, t)
-        gal_p = np.asarray(EM.extract_prototypes(g_params, gal_x))
-        gal_f = strategy.features(state, gal_p)
-        for tt in range(t + 1):
-            _, _, qx, qy = protos[(c, tt)]
-            qf = strategy.features(state, qx)
-            m = evaluate_retrieval(qf, qy, gal_f, gal_y)
-            tracker.record(c, tt, rnd, m)
-    per_round["mAP"] = tracker.mean_accuracy(rnd, "mAP")
-    per_round["R1"] = tracker.mean_accuracy(rnd, "R1")
-    per_round["R3"] = tracker.mean_accuracy(rnd, "R3")
-    per_round["R5"] = tracker.mean_accuracy(rnd, "R5")
+    for key in ("mAP",) + tuple(f"R{k}" for k in EVAL_RANKS):
+        per_round[key] = tracker.mean_accuracy(rnd, key)
     per_round["forgetting_mAP"] = tracker.mean_forgetting(rnd, "mAP")
     per_round["forgetting_R1"] = tracker.mean_forgetting(rnd, "R1")
     return per_round
 
 
+def _eval_round(strategy, get_state, bench, cache, tracker, rnd, t):
+    """Host eval block (Eq. 7/8), the allclose oracle: per-client retrieval
+    over all trained tasks. ``get_state(c)`` yields a ClientState-like view
+    for client c. Gallery prototypes come from the per-(c, t) cache."""
+    for c in range(bench.n_clients):
+        state = get_state(c)
+        gal_p, gal_y = cache.host_gallery(c, t)
+        gal_f = strategy.features(state, gal_p)
+        for tt in range(t + 1):
+            _, _, qx, qy = cache.protos[(c, tt)]
+            qf = strategy.features(state, qx)
+            m = evaluate_retrieval(qf, qy, gal_f, gal_y, ranks=EVAL_RANKS)
+            tracker.record(c, tt, rnd, m)
+    return _round_summary(tracker, rnd)
+
+
+def _eval_round_device(strategy, theta_stacked, cache, tracker, rnd, t):
+    """Device eval block: every (client, trained task) mAP/CMC in ONE jitted
+    program — vmapped feature heads over the stacked eval pytree, all
+    distance matrices through the kernels/pairwise_dist path, metric math
+    on device. Only the tiny (C, T, metrics) result is read back to feed
+    the lifelong tracker (the Eq. 8 forgetting bookkeeping)."""
+    gp, gids, gmask = cache.device_gallery(t)
+    out = strategy.eval_round_stacked(
+        theta_stacked, cache.qp, cache.qids, cache.task_mask(t),
+        gp, gids, gmask, ranks=EVAL_RANKS, max_matches=cache.max_matches)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    for c in range(cache.bench.n_clients):
+        for tt in range(t + 1):
+            tracker.record(c, tt, rnd,
+                           {k: float(out[k][c, tt]) for k in out})
+    return _round_summary(tracker, rnd)
+
+
 def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                    *, rounds: int = 12, eval_every: int = 2,
                    seed: int = 0, verbose: bool = False,
-                   engine: str = "host") -> SimulationResult:
+                   engine: str = "host",
+                   eval_backend: str = "device") -> SimulationResult:
     if engine not in ("host", "stacked"):
         raise ValueError(f"unknown engine {engine!r}")
+    if eval_backend not in ("device", "host"):
+        raise ValueError(f"unknown eval_backend {eval_backend!r}")
     if engine == "stacked" and not strategy.supports_stacked:
         raise ValueError(
             f"strategy {strategy.name!r} does not implement the stacked "
@@ -141,6 +267,9 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
     server_s = 0.0
 
     protos = _pre_extract_prototypes(bench, g_params)
+    cache = _EvalCache(bench, protos, device=eval_backend == "device")
+    # ragged benchmarks cannot be stacked — fall back to the host oracle
+    eval_dev = cache.device_ready
 
     if engine == "stacked":
         stacked = strategy.stack_states(states)
@@ -153,9 +282,8 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
             stacked, upload = strategy.local_train_stacked(
                 stacked, bx, by, protos_list, labels_list, rnd)
             if upload is not None:
-                per_client = strategy.stacked_upload_bytes(upload, C)
-                for _ in range(C):
-                    comm.log_c2s(rnd, per_client)
+                comm.log_c2s_many(
+                    rnd, strategy.stacked_upload_bytes(upload, C), C)
 
             if strategy.uses_server and upload is not None:
                 t0 = time.perf_counter()
@@ -165,16 +293,19 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                     per_client = strategy.stacked_dispatch_bytes(dispatch, C)
                     nz = np.asarray(dispatch["nz"]) if "nz" in dispatch \
                         else np.ones((C,), bool)
-                    for c in range(C):
-                        if nz[c]:
-                            comm.log_s2c(rnd, per_client)
+                    comm.log_s2c_many(rnd, per_client, int(nz.sum()))
                     stacked = strategy.apply_dispatch_stacked(stacked,
                                                               dispatch)
 
             if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
-                per_round = _eval_round(
-                    strategy, lambda c: strategy.client_view(stacked, c),
-                    bench, g_params, protos, tracker, rnd, t)
+                if eval_dev:
+                    per_round = _eval_round_device(
+                        strategy, strategy.eval_theta_stacked(stacked),
+                        cache, tracker, rnd, t)
+                else:
+                    per_round = _eval_round(
+                        strategy, lambda c: strategy.client_view(stacked, c),
+                        bench, cache, tracker, rnd, t)
                 eval_rounds.append(per_round)
                 if verbose:
                     print(f"  [{strategy.name}/stacked] round {rnd}: "
@@ -219,8 +350,13 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                     states[c] = strategy.apply_dispatch(states[c], d)
 
         if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
-            per_round = _eval_round(strategy, lambda c: states[c], bench,
-                                    g_params, protos, tracker, rnd, t)
+            if eval_dev:
+                per_round = _eval_round_device(
+                    strategy, strategy.stack_eval_thetas(states), cache,
+                    tracker, rnd, t)
+            else:
+                per_round = _eval_round(strategy, lambda c: states[c], bench,
+                                        cache, tracker, rnd, t)
             eval_rounds.append(per_round)
             if verbose:
                 print(f"  [{strategy.name}] round {rnd}: "

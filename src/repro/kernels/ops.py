@@ -17,6 +17,7 @@ from repro.kernels import ref as REF
 from repro.kernels.adaptive_combine import adaptive_combine as _combine
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kl_similarity import kl_similarity as _kl
+from repro.kernels.pairwise_dist import batched_pairwise_dist as _bpdist
 from repro.kernels.pairwise_dist import pairwise_dist as _pdist
 from repro.kernels.relevance_aggregate import relevance_aggregate as _agg
 from repro.kernels.relevance_aggregate import \
@@ -48,6 +49,16 @@ def pairwise_dist(q, g, *, backend: str = None):
     if b == "ref":
         return REF.pairwise_dist_ref(q, g)
     return _pdist(q, g, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def batched_pairwise_dist(q, g, *, backend: str = None):
+    """(C, Q, D) x (C, G, D) -> (C, Q, G): all clients' distance matrices
+    in one launch (the batched retrieval-eval hot spot)."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_pairwise_dist_ref(q, g)
+    return _bpdist(q, g, interpret=(b == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

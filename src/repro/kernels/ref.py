@@ -32,6 +32,15 @@ def pairwise_dist_ref(q, g):
     return qq + gg[None, :] - 2.0 * (q @ g.T)
 
 
+def batched_pairwise_dist_ref(q, g):
+    """Per-client squared euclidean: (C,Q,D) x (C,G,D) -> (C,Q,G), fp32."""
+    q = q.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    qq = jnp.sum(q * q, -1)[:, :, None]
+    gg = jnp.sum(g * g, -1)[:, None, :]
+    return qq + gg - 2.0 * jnp.einsum("cqd,cgd->cqg", q, g)
+
+
 def adaptive_combine_ref(base, alpha, a):
     """FedSTIL Eq. 2: theta = B ⊙ alpha + A (elementwise, any shape)."""
     return base * alpha + a

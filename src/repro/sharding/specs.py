@@ -155,6 +155,37 @@ def stacked_aggregate_specs(*, client_axis: str = "data",
     }
 
 
+def stacked_eval_specs(*, client_axis: str = "data"):
+    """PartitionSpecs for the batched (C x tasks) retrieval eval at C ≫ 1000.
+
+    Every input and output carries a leading client dim sharded over
+    ``client_axis``; the task/query/gallery content dims stay unsharded.
+    Each device then evaluates its own block of clients end-to-end (feature
+    heads, distance matrices, ranking, metrics) with NO cross-client
+    collectives — retrieval eval is embarrassingly parallel over clients,
+    unlike the Eq. 6 aggregate which contracts the client dim.
+    """
+    def row(nd):
+        return P(*((client_axis,) + (None,) * (nd - 1)))
+
+    return {
+        "qf": row(4),          # (C, T, Q, D) query prototypes/features
+        "qids": row(3),        # (C, T, Q)
+        "task_mask": row(2),   # (C, T)
+        "gf": row(3),          # (C, G, D) gallery prototypes/features
+        "gids": row(2),        # (C, G)
+        "gmask": row(2),       # (C, G)
+        "metrics": row(2),     # (C, T) per metric key
+    }
+
+
+def stacked_eval_theta_specs(theta, *, client_axis: str = "data"):
+    """PartitionSpec pytree for a stacked (C, ...) eval-theta pytree:
+    client rows over ``client_axis``, everything else replicated."""
+    return jax.tree.map(
+        lambda l: P(*((client_axis,) + (None,) * (l.ndim - 1))), theta)
+
+
 def batch_axes(global_batch: int, dp: int, multi_pod: bool):
     """Which axes the batch dim shards over (None if not divisible)."""
     axes = ("pod", "data") if multi_pod else ("data",)

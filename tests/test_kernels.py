@@ -9,7 +9,7 @@ from repro.kernels import ref as REF
 from repro.kernels.adaptive_combine import adaptive_combine
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.kl_similarity import kl_similarity
-from repro.kernels.pairwise_dist import pairwise_dist
+from repro.kernels.pairwise_dist import batched_pairwise_dist, pairwise_dist
 from repro.kernels.relevance_aggregate import relevance_aggregate
 
 
@@ -50,6 +50,25 @@ def test_pairwise_dist(Q, G, D, dtype):
     ref = REF.pairwise_dist_ref(q, g)
     tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("C,Q,G,D", [(1, 64, 64, 32), (3, 30, 130, 64),
+                                     (5, 8, 300, 16)])
+def test_batched_pairwise_dist(C, Q, G, D, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    q = _rand(k1, (C, Q, D), dtype)
+    g = _rand(k2, (C, G, D), dtype)
+    out = batched_pairwise_dist(q, g, q_block=32, g_block=64, interpret=True)
+    ref = REF.batched_pairwise_dist_ref(q, g)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=tol, rtol=tol)
+    # and per-client equivalence with the unbatched kernel path
+    per = jnp.stack([pairwise_dist(q[c], g[c], interpret=True)
+                     for c in range(C)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(per),
                                atol=tol, rtol=tol)
 
 

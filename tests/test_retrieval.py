@@ -30,3 +30,31 @@ def test_cmc_ranks():
     gid = np.array([2, 1, 3])   # correct match ranked 2nd
     m = evaluate_retrieval(qf, qid, gf, gid, ranks=(1, 3, 5))
     assert m["R1"] == 0.0 and m["R3"] == 1.0
+
+
+def test_distance_ties_resolve_by_gallery_order():
+    """Stable sort: exactly tied gallery rows rank in index order."""
+    qf = np.array([[1.0, 0.0]])
+    gf = np.array([[1.0, 0.0], [1.0, 0.0]])   # identical rows: exact tie
+    m = evaluate_retrieval(qf, np.array([7]), gf, np.array([3, 7]))
+    # non-match (id 3) is earlier in the gallery, so it wins the tie:
+    # the match sits at rank 2 -> AP = 1/2, R1 = 0, R3 = 1
+    assert abs(m["mAP"] - 0.5) < 1e-6
+    assert m["R1"] == 0.0 and m["R3"] == 1.0
+
+
+def test_query_without_cross_camera_match_is_excluded():
+    """A query whose id never appears in the gallery is dropped from every
+    average (not scored 0)."""
+    qf = np.array([[1.0, 0.0], [0.0, 1.0]])
+    gf = np.array([[1.0, 0.0], [0.6, 0.8]])
+    m = evaluate_retrieval(qf, np.array([7, 9]), gf, np.array([7, 3]))
+    # only query 0 counts; its match is rank 1
+    assert m["mAP"] == 1.0 and m["R1"] == 1.0
+
+
+def test_all_invalid_query_set_scores_zero():
+    qf = np.array([[1.0, 0.0], [0.0, 1.0]])
+    gf = np.array([[1.0, 0.0]])
+    m = evaluate_retrieval(qf, np.array([9, 8]), gf, np.array([3]))
+    assert m["mAP"] == 0.0 and m["R1"] == 0.0 and m["R5"] == 0.0
