@@ -4,8 +4,9 @@
 ``name,us_per_call,derived`` CSV rows. ``--bench server`` runs the
 host-vs-stacked server-round sweep (``BENCH_server_round.json``);
 ``--bench eval`` runs the host-vs-batched eval-round sweep
-(``BENCH_eval_round.json``) — the machine-readable perf trajectories
-future PRs regress against.
+(``BENCH_eval_round.json``); ``--bench comm`` runs the wire-codec
+host-loop-vs-batched encode/decode sweep (``BENCH_comm_round.json``) —
+the machine-readable perf trajectories future PRs regress against.
 """
 import argparse
 import sys
@@ -16,7 +17,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table2|table3|table4|table5|table6|fig6|fig8|kernels")
-    ap.add_argument("--bench", default=None, choices=["server", "eval"],
+    ap.add_argument("--bench", default=None,
+                    choices=["server", "eval", "comm"],
                     help="perf-trajectory benches (JSON output)")
     args = ap.parse_args()
 
@@ -28,6 +30,11 @@ def main() -> None:
     if args.bench == "eval":
         from benchmarks.eval_round import bench_eval_round
         bench_eval_round()
+        if args.only is None:
+            return
+    if args.bench == "comm":
+        from benchmarks.comm_round import bench_comm_round
+        bench_comm_round()
         if args.only is None:
             return
 

@@ -6,8 +6,10 @@
 # Usage: scripts/run_tier1.sh [--smoke] [pytest args...]
 #   --smoke  additionally exercise the device-resident path end-to-end:
 #            a 2-round FedSTIL simulation on engine="stacked", the
-#            `--only relevance` kernel-bench sweep, and a 1-eval smoke of
-#            the batched eval-round bench (device vs host-loop parity).
+#            `--only relevance` kernel-bench sweep, a 1-eval smoke of
+#            the batched eval-round bench (device vs host-loop parity),
+#            and the wire-codec comm bench at C=5 (1-round encode/decode
+#            host-vs-batched parity assert).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -46,4 +48,7 @@ EOF
     echo "=== smoke: batched eval round (device vs host loop) ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.eval_round --smoke
+    echo "=== smoke: wire-codec comm round (host loop vs batched, parity) ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.comm_round --smoke
 fi

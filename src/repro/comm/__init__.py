@@ -1,1 +1,3 @@
 from repro.comm.accounting import CommLog, fmt_bytes
+from repro.comm.batched import BatchedCodec
+from repro.comm.codec import Codec, PipelineCodec, WirePayload, make_codec

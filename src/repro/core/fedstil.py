@@ -149,6 +149,27 @@ class FedSTIL(Strategy):
             state.extras["reg_B"] = dispatch["B"]
         return state
 
+    # ---- wire-codec payload split --------------------------------------------
+    # Uploads are (theta, task feature): theta is the bulk payload the codec
+    # compresses; the Eq. 3 task feature is the server's control plane for
+    # relevance (Eq. 4/5) and ships verbatim — letting global top-k compete
+    # theta entries against it would distort W for a negligible byte win.
+    # Dispatches are (B, engine metadata): only B is wire payload.
+
+    def split_upload_for_wire(self, upload):
+        return ({"theta": upload["theta"]},
+                {"task_feature": upload["task_feature"]})
+
+    def join_upload_from_wire(self, decoded, verbatim):
+        return {"theta": decoded["theta"], **verbatim}
+
+    def split_dispatch_for_wire(self, dispatch):
+        verbatim = {k: v for k, v in dispatch.items() if k != "B"}
+        return {"B": dispatch["B"]}, (verbatim or None)
+
+    def join_dispatch_from_wire(self, decoded, verbatim):
+        return {"B": decoded["B"], **(verbatim or {})}
+
     def storage_bytes(self, state):
         mem: PrototypeMemory = state.extras["memory"]
         return (tree_bytes(state.theta) + tree_bytes(state.extras["reg_B"])

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.batched import BatchedCodec
+from repro.comm.codec import make_codec
 from repro.core import edge_model as EM
 from repro.evalreid.batched import batched_retrieval_metrics
 from repro.train.optimizer import adam, apply_updates, clip_by_global_norm
@@ -108,7 +110,7 @@ class Strategy:
     supports_stacked = False
 
     def __init__(self, cfg: EM.EdgeModelConfig, *, lr=1e-3, weight_decay=1e-5,
-                 epochs=5, batch=64, seed=0):
+                 epochs=5, batch=64, seed=0, codec=None, codec_opts=None):
         self.cfg = cfg
         self.lr = lr
         self.epochs = epochs
@@ -116,6 +118,16 @@ class Strategy:
         self.opt = adam(lr=lr, weight_decay=weight_decay)
         self._jit_cache: Dict[str, Callable] = {}
         self.rng = np.random.default_rng(seed)
+        # wire codecs (repro.comm.codec): when set, the simulation encodes
+        # every upload/dispatch, logs the MEASURED buffer bytes (formulas
+        # stay as the cross-check oracle), and the receiver trains on the
+        # decoded — possibly lossy — payload. One codec instance per
+        # direction so delta state never crosses streams.
+        self.codec_spec = codec
+        self.codec_opts = dict(codec_opts or {})
+        self.upload_codec = make_codec(codec, **self.codec_opts)
+        self.dispatch_codec = make_codec(codec, **self.codec_opts)
+        self._wire_programs: Dict[Any, BatchedCodec] = {}
 
     # ---- default loss: CE on adaptive layers --------------------------------
     def make_theta(self, trainable, extras):
@@ -195,6 +207,89 @@ class Strategy:
     def dispatch_bytes(self, dispatch) -> int:
         from repro.common.pytree import tree_bytes
         return tree_bytes(dispatch)
+
+    # ---- wire codecs ---------------------------------------------------------
+    # What part of a payload goes through the (lossy) codec vs ships
+    # verbatim. Default: everything is codec traffic. FedSTIL overrides to
+    # keep the tiny Eq. 3 task feature (the server's control plane) exact —
+    # top-k sparsification across a concatenated payload would otherwise
+    # let large theta entries starve it.
+
+    def split_upload_for_wire(self, upload) -> Tuple[Any, Any]:
+        """(codec subtree, verbatim subtree or None) for an upload."""
+        return upload, None
+
+    def join_upload_from_wire(self, decoded, verbatim):
+        return decoded
+
+    def split_dispatch_for_wire(self, dispatch) -> Tuple[Any, Any]:
+        return dispatch, None
+
+    def join_dispatch_from_wire(self, decoded, verbatim):
+        return decoded
+
+    def _wire_roundtrip(self, codec, tree, split, join, peer):
+        """Encode -> measure -> decode one payload through a host codec
+        (single-pass roundtrip: the reconstruction is computed once).
+        Returns (the receiver-visible decoded payload, measured bytes
+        including verbatim control tensors)."""
+        from repro.common.pytree import tree_bytes
+        lossy, verbatim = split(tree)
+        decoded, payload = codec.roundtrip(lossy, peer=peer)
+        measured = payload.nbytes
+        if verbatim is not None:
+            measured += tree_bytes(verbatim)
+        return join(decoded, verbatim), measured
+
+    def wire_upload(self, upload, client: int):
+        """Host-engine C2S wire round-trip for one client's upload."""
+        return self._wire_roundtrip(
+            self.upload_codec, upload, self.split_upload_for_wire,
+            self.join_upload_from_wire, ("c2s", client))
+
+    def wire_dispatch(self, dispatch, client: int):
+        """Host-engine S2C wire round-trip for one client's dispatch."""
+        return self._wire_roundtrip(
+            self.dispatch_codec, dispatch, self.split_dispatch_for_wire,
+            self.join_dispatch_from_wire, ("s2c", client))
+
+    def _stacked_wire_program(self, which: str, p: int) -> BatchedCodec:
+        """Cached device codec program for one direction at payload size p
+        (compiled once per simulation — p is fixed by the model)."""
+        key = (which, p)
+        if key not in self._wire_programs:
+            template = (self.upload_codec if which == "upload"
+                        else self.dispatch_codec)
+            self._wire_programs[key] = BatchedCodec(template, p)
+        return self._wire_programs[key]
+
+    def _wire_roundtrip_stacked(self, which, tree, split, join):
+        """Stacked-engine wire round-trip: ALL C clients' payload rows are
+        encoded/decoded by one jitted device program (Pallas sparsify +
+        quantize kernels via kernels.ops); measured per-client bytes come
+        from the encoded buffer shapes — zero host readbacks."""
+        from repro.common.pytree import (tree_bytes, tree_flatten_stacked,
+                                         tree_unflatten_stacked)
+        lossy, verbatim = split(tree)
+        mat, meta = tree_flatten_stacked(lossy)
+        C = mat.shape[0]
+        prog = self._stacked_wire_program(which, int(mat.shape[1]))
+        recon, buffers = prog.roundtrip(mat)
+        per_client = prog.per_client_bytes(buffers)
+        if verbatim is not None:
+            per_client += tree_bytes(verbatim) // max(C, 1)
+        decoded = tree_unflatten_stacked(recon, meta)
+        return join(decoded, verbatim), per_client
+
+    def wire_upload_stacked(self, upload):
+        return self._wire_roundtrip_stacked(
+            "upload", upload, self.split_upload_for_wire,
+            self.join_upload_from_wire)
+
+    def wire_dispatch_stacked(self, dispatch):
+        return self._wire_roundtrip_stacked(
+            "dispatch", dispatch, self.split_dispatch_for_wire,
+            self.join_dispatch_from_wire)
 
     def features(self, state: ClientState, protos):
         feats, _ = EM.adaptive_forward(self._eval_theta(state), jnp.asarray(protos))

@@ -37,6 +37,15 @@ Two interchangeable engines drive the rounds:
 Strategies that need raw images (iCaRL) or non-batchable local steps
 (EWC/MAS consolidation, FedWeIT sparse uploads) simply keep the default
 host engine.
+
+Wire codecs (``Strategy(codec="topk+int8")``, see repro/comm/codec.py)
+change what moves on the client<->server path in BOTH engines: every
+upload/dispatch is encoded to real wire buffers, the comm log records the
+MEASURED buffer bytes next to the analytic formulas
+(``SimulationResult.comm_breakdown()``), and the receiver operates on the
+decoded — possibly lossy — payload, so compression fidelity shows up in
+the metrics. The stacked engine encodes all C clients' payload rows in one
+jitted device program (kernels/topk_pack + kernels/quantize).
 """
 from __future__ import annotations
 
@@ -73,6 +82,12 @@ class SimulationResult:
 
     def final_metrics(self) -> Dict[str, float]:
         return self.rounds[-1] if self.rounds else {}
+
+    def comm_breakdown(self) -> List[Dict[str, int]]:
+        """Per-round measured-vs-formula wire bytes (both directions).
+        With codecs active the *_wire columns are measured encoded-buffer
+        sizes; without, they equal the analytic *_formula columns."""
+        return self.comm.round_breakdown()
 
 
 def _pre_extract_prototypes(bench: FederatedReIDBenchmark, g_params):
@@ -282,8 +297,14 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
             stacked, upload = strategy.local_train_stacked(
                 stacked, bx, by, protos_list, labels_list, rnd)
             if upload is not None:
-                comm.log_c2s_many(
-                    rnd, strategy.stacked_upload_bytes(upload, C), C)
+                formula = strategy.stacked_upload_bytes(upload, C)
+                if strategy.upload_codec is not None:
+                    # one batched device encode/decode for all C rows; the
+                    # server round consumes the decoded (lossy) upload
+                    upload, measured = strategy.wire_upload_stacked(upload)
+                    comm.log_c2s_many(rnd, formula, C, measured=measured)
+                else:
+                    comm.log_c2s_many(rnd, formula, C)
 
             if strategy.uses_server and upload is not None:
                 t0 = time.perf_counter()
@@ -293,7 +314,24 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                     per_client = strategy.stacked_dispatch_bytes(dispatch, C)
                     nz = np.asarray(dispatch["nz"]) if "nz" in dispatch \
                         else np.ones((C,), bool)
-                    comm.log_s2c_many(rnd, per_client, int(nz.sum()))
+                    if strategy.dispatch_codec is not None:
+                        # the stacked wire model is a BROADCAST stream: the
+                        # codec encodes (and the delta refs advance for)
+                        # ALL C rows every dispatch round, so all C are
+                        # shipped and counted — every client can decode,
+                        # including nz=False rows it won't apply. The host
+                        # engine instead opens a per-client stream at that
+                        # client's first non-empty dispatch; under partial
+                        # nz its byte totals are lower by design.
+                        dispatch, measured = strategy.wire_dispatch_stacked(
+                            dispatch)
+                        # formula oracle keeps the host-engine semantics
+                        # (one analytic dispatch per nz client)
+                        comm.log_s2c_many(rnd, per_client, C,
+                                          measured=measured,
+                                          n_formula=int(nz.sum()))
+                    else:
+                        comm.log_s2c_many(rnd, per_client, int(nz.sum()))
                     stacked = strategy.apply_dispatch_stacked(stacked,
                                                               dispatch)
 
@@ -337,8 +375,15 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                 states[c], up = strategy.local_train(c, states[c], px, py, rnd,
                                                      consolidate=consolidate)
             if up is not None:
+                formula = strategy.upload_bytes(up)
+                if strategy.upload_codec is not None:
+                    # the server integrates the DECODED (possibly lossy)
+                    # upload — exactly what crossed the wire
+                    up, measured = strategy.wire_upload(up, c)
+                    comm.log_c2s(rnd, formula, measured=measured)
+                else:
+                    comm.log_c2s(rnd, formula)
                 uploads[c] = up
-                comm.log_c2s(rnd, strategy.upload_bytes(up))
 
         if strategy.uses_server and uploads:
             t0 = time.perf_counter()
@@ -346,7 +391,12 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
             server_s += time.perf_counter() - t0
             for c, d in dispatches.items():
                 if d:
-                    comm.log_s2c(rnd, strategy.dispatch_bytes(d))
+                    formula = strategy.dispatch_bytes(d)
+                    if strategy.dispatch_codec is not None:
+                        d, measured = strategy.wire_dispatch(d, c)
+                        comm.log_s2c(rnd, formula, measured=measured)
+                    else:
+                        comm.log_s2c(rnd, formula)
                     states[c] = strategy.apply_dispatch(states[c], d)
 
         if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:

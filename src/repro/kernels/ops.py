@@ -19,9 +19,13 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kl_similarity import kl_similarity as _kl
 from repro.kernels.pairwise_dist import batched_pairwise_dist as _bpdist
 from repro.kernels.pairwise_dist import pairwise_dist as _pdist
+from repro.kernels.quantize import batched_dequantize as _bdequant
+from repro.kernels.quantize import batched_quantize as _bquant
 from repro.kernels.relevance_aggregate import relevance_aggregate as _agg
 from repro.kernels.relevance_aggregate import \
     fused_relevance_aggregate as _fused_agg
+from repro.kernels.topk_pack import batched_topk_pack as _btopk
+from repro.kernels.topk_pack import batched_topk_unpack as _buntopk
 
 DEFAULT_BACKEND = "auto"
 
@@ -84,6 +88,45 @@ def fused_relevance_aggregate(w, thetas, *, backend: str = None):
     if b == "ref":
         return REF.fused_relevance_aggregate_ref(w, thetas)
     return _fused_agg(w, thetas, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def batched_quantize(x, *, chunk: int = 256, backend: str = None):
+    """Wire-codec quantize stage: (C, P) fp32 -> ((C, P) int8, per-chunk
+    scales) for all C clients' payloads in one launch."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_quantize_ref(x, chunk=chunk)
+    return _bquant(x, chunk=chunk, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def batched_dequantize(q, scales, *, chunk: int = 256, backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_dequantize_ref(q, scales, chunk=chunk)
+    return _bdequant(q, scales, chunk=chunk, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("group", "kg", "backend"))
+def batched_topk_pack(x, *, group: int = 8, kg: int, backend: str = None):
+    """Wire-codec sparsify stage: (C, P) -> (values (C, ceil(P/group)*kg),
+    packed int32 indices); exact top-kg magnitudes per group of ``group``
+    contiguous elements, deterministic ties (lowest index)."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_topk_pack_ref(x, group=group, kg=kg)
+    return _btopk(x, group=group, kg=kg, interpret=(b == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("p", "group", "kg", "backend"))
+def batched_topk_unpack(vals, idx, *, p: int, group: int = 8, kg: int,
+                        backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_topk_unpack_ref(vals, idx, p=p, group=group, kg=kg)
+    return _buntopk(vals, idx, p=p, group=group, kg=kg,
+                    interpret=(b == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: batched per-chunk int8 quantization (wire codec).
+
+The comm subsystem's quantize stage maps every client's flattened upload
+row to int8 with one fp32 scale per ``chunk`` contiguous elements:
+
+    scale[c, j] = max(|x[c, j*chunk:(j+1)*chunk]|) / 127     (0 -> 1.0)
+    q[c, i]     = clip(round(x[c, i] / scale), -127, 127)
+
+x: (C, P) stacked client payloads -> (q: (C, P) int8, scales: (C, ceil(P /
+chunk)) fp32). One grid step quantizes a (1, p_block) tile (p_block is a
+multiple of ``chunk``, so every chunk's absmax lives in VMEM with its
+data); all C clients' uploads are encoded in a single launch before any
+host readback. Rounding is round-half-to-even (deterministic, matches the
+numpy host codec bit-for-bit on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.common.compat import default_interpret
+
+CHUNK = 256
+P_BLOCK = 2048
+
+
+def _block_for(chunk: int, p: int) -> int:
+    """Largest chunk-multiple block <= P_BLOCK (at least one chunk)."""
+    return chunk * max(1, min(P_BLOCK, p) // chunk)
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (1, pb)
+    nc = s_ref.shape[1]
+    xc = x.reshape(nc, -1)                          # (nc, chunk)
+    absmax = jnp.max(jnp.abs(xc), axis=1, keepdims=True)
+    scale = absmax / 127.0
+    scale = jnp.where(scale > 0, scale, 1.0)   # all-zero / subnormal chunks
+    q = jnp.clip(jnp.round(xc / scale), -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8).reshape(1, -1)
+    s_ref[...] = scale.reshape(1, nc)
+
+
+def batched_quantize(x, *, chunk: int = CHUNK,
+                     interpret: Optional[bool] = None):
+    """(C, P) fp32 -> ((C, P) int8, (C, ceil(P/chunk)) fp32 scales)."""
+    if interpret is None:
+        interpret = default_interpret()
+    C, P = x.shape
+    nc = (P + chunk - 1) // chunk
+    pb = _block_for(chunk, P)
+    Pp = (P + pb - 1) // pb * pb
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Pp - P)))
+
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(C, Pp // pb),
+        in_specs=[pl.BlockSpec((1, pb), lambda c, j: (c, j))],
+        out_specs=[
+            pl.BlockSpec((1, pb), lambda c, j: (c, j)),
+            pl.BlockSpec((1, pb // chunk), lambda c, j: (c, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, Pp), jnp.int8),
+            jax.ShapeDtypeStruct((C, Pp // chunk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    return q[:, :P], s[:, :nc]
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)              # (1, pb)
+    nc = s_ref.shape[1]
+    s = s_ref[...].reshape(nc, 1)
+    o_ref[...] = (q.reshape(nc, -1) * s).reshape(1, -1)
+
+
+def batched_dequantize(q, scales, *, chunk: int = CHUNK,
+                       interpret: Optional[bool] = None):
+    """Inverse of ``batched_quantize``: (C, P) int8 + scales -> (C, P) fp32."""
+    if interpret is None:
+        interpret = default_interpret()
+    C, P = q.shape
+    pb = _block_for(chunk, P)
+    Pp = (P + pb - 1) // pb * pb
+    qp = jnp.pad(q, ((0, 0), (0, Pp - P)))
+    sp = jnp.pad(scales, ((0, 0), (0, Pp // chunk - scales.shape[1])),
+                 constant_values=1.0)
+
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(C, Pp // pb),
+        in_specs=[
+            pl.BlockSpec((1, pb), lambda c, j: (c, j)),
+            pl.BlockSpec((1, pb // chunk), lambda c, j: (c, j)),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda c, j: (c, j)),
+        out_shape=jax.ShapeDtypeStruct((C, Pp), jnp.float32),
+        interpret=interpret,
+    )(qp, sp)
+    return out[:, :P]

@@ -69,6 +69,96 @@ def fused_relevance_aggregate_ref(w, thetas):
     return b, wn
 
 
+def batched_quantize_ref(x, *, chunk: int = 256):
+    """Per-chunk symmetric int8 quantization of stacked payload rows:
+    (C, P) fp32 -> ((C, P) int8, (C, ceil(P/chunk)) fp32 scales). Chunks of
+    ``chunk`` contiguous elements share one scale = absmax/127 (1.0 for
+    all-zero chunks); round-half-to-even, clip to [-127, 127]."""
+    C, P = x.shape
+    nc = (P + chunk - 1) // chunk
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, nc * chunk - P)))
+    xc = xp.reshape(C, nc, chunk)
+    absmax = jnp.max(jnp.abs(xc), axis=2, keepdims=True)
+    scale = absmax / 127.0
+    scale = jnp.where(scale > 0, scale, 1.0)   # all-zero / subnormal chunks
+    q = jnp.clip(jnp.round(xc / scale), -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(C, nc * chunk)[:, :P], scale[..., 0]
+
+
+def batched_dequantize_ref(q, scales, *, chunk: int = 256):
+    """Inverse of ``batched_quantize_ref``: (C, P) int8 + per-chunk scales
+    -> (C, P) fp32."""
+    C, P = q.shape
+    nc = scales.shape[1]
+    qp = jnp.pad(q, ((0, 0), (0, nc * chunk - P))).astype(jnp.float32)
+    out = qp.reshape(C, nc, chunk) * scales[..., None]
+    return out.reshape(C, nc * chunk)[:, :P]
+
+
+def grouped_topk_rank_ref(x, *, group: int):
+    """Exact within-group magnitude ranks for stacked rows.
+
+    x: (C, P) (P padded to a group multiple by the callers) viewed as
+    groups of ``group`` contiguous elements; returns (C, P//group, group)
+    int32 ranks, 0 = largest magnitude. Ties broken by lowest index, so
+    ranks are a permutation of 0..group-1 — the counting form (an 8x8
+    broadcast compare, no sort / no scatter / no cumsum) is what makes
+    top-k selection fast on every backend, and the deterministic
+    semantics every implementation (numpy host codec, this oracle, the
+    Pallas kernel) shares bit-for-bit."""
+    C, P = x.shape
+    nb = P // group
+    a = jnp.abs(x.astype(jnp.float32)).reshape(C, nb, group)
+    ai = a[..., :, None]                                   # rank of i ...
+    aj = a[..., None, :]                                   # ... vs every j
+    ii = jnp.arange(group)
+    beats = jnp.logical_or(aj > ai,
+                           jnp.logical_and(aj == ai,
+                                           ii[None, :] < ii[:, None]))
+    return jnp.sum(beats.astype(jnp.int32), axis=-1)       # (C, nb, group)
+
+
+def batched_topk_pack_ref(x, *, group: int, kg: int):
+    """Grouped top-k sparsify+pack: (C, P) -> (values (C, nb*kg) fp32,
+    indices (C, nb*kg) int32) where nb = ceil(P/group) and every group of
+    ``group`` contiguous elements keeps its ``kg`` largest magnitudes
+    (ties by lowest index), packed in magnitude-rank order.
+
+    The group-local budget is the device-friendly form of top-k: selection
+    is an O(group^2) counting compare and packing is a one-hot reduction —
+    no global sort, no scatter — while delta/error-feedback encoding (see
+    comm.codec) makes the uniform per-group budget self-correcting."""
+    C, P = x.shape
+    nb = (P + group - 1) // group
+    Pp = nb * group
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Pp - P)))
+    rank = grouped_topk_rank_ref(xp, group=group)          # (C, nb, G)
+    xg = xp.reshape(C, nb, group)
+    onehot = (rank[..., None] ==
+              jnp.arange(kg)[None, None, None, :])         # (C, nb, G, kg)
+    oh = onehot.astype(jnp.float32)
+    vals = jnp.sum(xg[..., None] * oh, axis=2)             # (C, nb, kg)
+    gidx = (jnp.arange(nb, dtype=jnp.int32)[:, None] * group
+            + jnp.arange(group, dtype=jnp.int32)[None, :])  # (nb, G)
+    idx = jnp.sum(gidx[None, :, :, None] * onehot.astype(jnp.int32), axis=2)
+    return vals.reshape(C, nb * kg), idx.reshape(C, nb * kg)
+
+
+def batched_topk_unpack_ref(vals, idx, *, p: int, group: int, kg: int):
+    """Inverse of ``batched_topk_pack_ref``: (C, nb*kg) values + indices
+    -> dense (C, p) fp32 (dropped entries zero). One-hot reduction per
+    group — scatter-free like the pack."""
+    C, K = vals.shape
+    nb = K // kg
+    vb = vals.astype(jnp.float32).reshape(C, nb, kg)
+    li = (idx.reshape(C, nb, kg)
+          - (jnp.arange(nb, dtype=jnp.int32) * group)[None, :, None])
+    onehot = (li[..., None] ==
+              jnp.arange(group, dtype=jnp.int32)[None, None, None, :])
+    dense = jnp.sum(vb[..., None] * onehot.astype(jnp.float32), axis=2)
+    return dense.reshape(C, nb * group)[:, :p]
+
+
 def kl_similarity_ref(a, b):
     """exp(-KL(softmax(a_i) || softmax(b_j))): (N,D) x (M,D) -> (N,M)."""
     p = jax.nn.softmax(a.astype(jnp.float32), -1)

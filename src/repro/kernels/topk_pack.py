@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: batched grouped top-k sparsify + pack (wire codec).
+
+The comm subsystem's sparsify stage keeps, within every group of ``group``
+contiguous elements, the ``kg`` largest-magnitude entries (exact, ties by
+lowest index) and ships them as (values, packed int32 indices) in
+magnitude-rank order. The group-local budget is what makes top-k
+hardware-friendly: selection is an O(group^2) counting compare per group
+(a (G, G) broadcast on the VPU), and packing is a one-hot reduction into a
+REGULAR output layout (group b's survivors occupy slots [b*kg, (b+1)*kg))
+— no global sort, no scatter, no cross-tile communication, so the grid is
+embarrassingly parallel over (client, tile). Global exact top-k lives in
+the host codec (``comm.codec.topk_select_host``) where numpy's introselect
+is the right tool; on the wire the two formats carry identical byte counts
+at the same keep fraction.
+
+Semantics are bit-identical to ``ref.batched_topk_pack_ref`` and to the
+numpy host codec (same counting formulas), which the comm-round bench
+asserts. The unpack kernel mirrors the pack (one-hot expansion per group).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.common.compat import default_interpret
+
+GROUP = 8
+P_BLOCK = 2048
+
+
+def _block_for(group: int, p: int, cap: int = P_BLOCK) -> int:
+    """Largest group-multiple tile <= cap (at least one group)."""
+    return group * max(1, min(cap, p) // group)
+
+
+def _pack_kernel(x_ref, v_ref, i_ref, *, group: int, kg: int):
+    t = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)                     # (1, pb)
+    pb = x.shape[1]
+    nb = pb // group
+    xg = x.reshape(nb, group)
+    a = jnp.abs(xg)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (group, group), 0)  # i
+    jj = jax.lax.broadcasted_iota(jnp.int32, (group, group), 1)  # j
+    ai = a[:, :, None]
+    aj = a[:, None, :]
+    beats = jnp.logical_or(aj > ai, jnp.logical_and(aj == ai, jj < ii))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=-1)       # (nb, G)
+    onehot = (rank[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (nb, group, kg), 2))
+    vals = jnp.sum(xg[..., None] * onehot.astype(jnp.float32), axis=1)
+    base = (t * pb
+            + jax.lax.broadcasted_iota(jnp.int32, (nb, group), 0) * group
+            + jax.lax.broadcasted_iota(jnp.int32, (nb, group), 1))
+    idx = jnp.sum(base[..., None] * onehot.astype(jnp.int32), axis=1)
+    v_ref[...] = vals.reshape(1, nb * kg)
+    i_ref[...] = idx.reshape(1, nb * kg)
+
+
+def batched_topk_pack(x, *, group: int = GROUP, kg: int,
+                      p_block: int = P_BLOCK,
+                      interpret: Optional[bool] = None):
+    """(C, P) -> (values (C, nb*kg) fp32, indices (C, nb*kg) int32),
+    nb = ceil(P/group): every group keeps its kg largest magnitudes."""
+    if interpret is None:
+        interpret = default_interpret()
+    C, P = x.shape
+    pb = _block_for(group, P, p_block)
+    Pp = (P + pb - 1) // pb * pb
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, Pp - P)))
+    nb_total = Pp // group
+    ob = (pb // group) * kg                                # out tile width
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_pack_kernel, group=group, kg=kg),
+        grid=(C, Pp // pb),
+        in_specs=[pl.BlockSpec((1, pb), lambda c, t: (c, t))],
+        out_specs=[
+            pl.BlockSpec((1, ob), lambda c, t: (c, t)),
+            pl.BlockSpec((1, ob), lambda c, t: (c, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, nb_total * kg), jnp.float32),
+            jax.ShapeDtypeStruct((C, nb_total * kg), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp)
+    K = ((P + group - 1) // group) * kg
+    return vals[:, :K], idx[:, :K]
+
+
+def _unpack_kernel(v_ref, i_ref, o_ref, *, group: int, kg: int):
+    t = pl.program_id(1)
+    v = v_ref[...].astype(jnp.float32)                     # (1, ob)
+    ix = i_ref[...]                                        # (1, ob)
+    pb = o_ref.shape[1]
+    nb = pb // group
+    vb = v.reshape(nb, kg)
+    ib = ix.reshape(nb, kg)
+    base = (t * pb
+            + jax.lax.broadcasted_iota(jnp.int32, (nb, kg), 0) * group)
+    li = ib - base                                         # local 0..G-1
+    onehot = (li[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (nb, kg, group), 2))
+    dense = jnp.sum(vb[..., None] * onehot.astype(jnp.float32), axis=1)
+    o_ref[...] = dense.reshape(1, pb)
+
+
+def batched_topk_unpack(vals, idx, *, p: int, group: int = GROUP, kg: int,
+                        p_block: int = P_BLOCK,
+                        interpret: Optional[bool] = None):
+    """Inverse of ``batched_topk_pack``: one-hot expand (C, nb*kg) values
+    back into dense (C, p) fp32 rows (dropped entries zero)."""
+    if interpret is None:
+        interpret = default_interpret()
+    C, K = vals.shape
+    pb = _block_for(group, p, p_block)
+    Pp = (p + pb - 1) // pb * pb
+    ob = (pb // group) * kg
+    Kp = (Pp // group) * kg
+    vp = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, Kp - K)))
+    # padded slots carry value 0 and index -1: -1 can never equal a local
+    # in-group index (0..group-1), so they contribute nothing even in the
+    # first tile (index 0 would alias group 0's first element there)
+    ip = jnp.pad(idx, ((0, 0), (0, Kp - K)), constant_values=-1)
+
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, group=group, kg=kg),
+        grid=(C, Pp // pb),
+        in_specs=[
+            pl.BlockSpec((1, ob), lambda c, t: (c, t)),
+            pl.BlockSpec((1, ob), lambda c, t: (c, t)),
+        ],
+        out_specs=pl.BlockSpec((1, pb), lambda c, t: (c, t)),
+        out_shape=jax.ShapeDtypeStruct((C, Pp), jnp.float32),
+        interpret=interpret,
+    )(vp, ip)
+    return out[:, :p]

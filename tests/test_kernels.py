@@ -111,3 +111,49 @@ def test_kl_similarity(N, M, D):
     # similarity of a row with itself is exactly 1
     self_sim = kl_similarity(a, a, interpret=True)
     np.testing.assert_allclose(np.diag(np.asarray(self_sim)), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("C,P,chunk", [(3, 1000, 128), (5, 4096, 256),
+                                       (1, 100, 64), (4, 257, 256)])
+def test_batched_quantize(C, P, chunk):
+    """Wire-codec int8 kernel vs oracle: identical codes and scales, and
+    dequantized error within half a quantization step per chunk."""
+    from repro.kernels.quantize import batched_dequantize, batched_quantize
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (C, P), jnp.float32) * 3.0
+    q, s = batched_quantize(x, chunk=chunk, interpret=True)
+    qr, sr = REF.batched_quantize_ref(x, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    # interpret-mode division can differ from the jnp oracle by 1 ULP
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = batched_dequantize(q, s, chunk=chunk, interpret=True)
+    dr = REF.batched_dequantize_ref(qr, sr, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr),
+                               rtol=1e-6, atol=1e-7)
+    err = np.abs(np.asarray(d) - np.asarray(x))
+    assert err.max() <= float(jnp.abs(x).max()) / 127.0 * 0.5 + 1e-7
+
+
+@pytest.mark.parametrize("C,P,group,kg", [(3, 1000, 8, 3), (2, 4096, 8, 1),
+                                          (4, 257, 8, 4), (2, 640, 16, 5)])
+def test_batched_topk_pack_kernel(C, P, group, kg):
+    """Grouped top-k pack/unpack kernels vs oracles: bit-identical values,
+    indices, and dense reconstructions; per-group top-kg invariant."""
+    from repro.kernels.topk_pack import batched_topk_pack, batched_topk_unpack
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (C, P), jnp.float32)
+    v, i = batched_topk_pack(x, group=group, kg=kg, interpret=True)
+    vr, ir = REF.batched_topk_pack_ref(x, group=group, kg=kg)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    u = batched_topk_unpack(v, i, p=P, group=group, kg=kg, interpret=True)
+    ur = REF.batched_topk_unpack_ref(vr, ir, p=P, group=group, kg=kg)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ur))
+    # per-group invariant: kept entries are each group's kg largest
+    xa = np.abs(np.asarray(x))
+    un = np.asarray(u)
+    for c in range(C):
+        for b in range(0, P - group + 1, group):
+            grp, kept = xa[c, b:b + group], un[c, b:b + group] != 0
+            if kept.sum() == kg:
+                assert grp[kept].min() >= np.sort(grp)[-kg] - 1e-7

@@ -153,6 +153,79 @@ def test_shard_map_shim_resolves_both_layouts(new_layout):
         assert callable(resolve_shard_map(mod))
 
 
+_payload = hnp.arrays(np.float32, st.integers(1, 200),
+                      elements=st.floats(-100, 100, width=32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_payload)
+def test_codec_raw_roundtrip_exact(x):
+    """Lossless wire codec: decode(encode(tree)) is bit-exact and nbytes
+    equals the dense payload size."""
+    from repro.comm.codec import make_codec
+    codec = make_codec("raw")
+    tree = {"w": x}
+    payload = codec.encode(tree)
+    assert payload.nbytes == x.nbytes
+    np.testing.assert_array_equal(codec.decode(payload)["w"], x)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_payload)
+def test_codec_int8_error_bound(x):
+    """int8 stage: reconstruction error <= half a quantization step of
+    each chunk's absmax."""
+    from repro.comm.codec import make_codec
+    codec = make_codec("int8", chunk=32)
+    dec = codec.decode(codec.encode({"w": x}))["w"]
+    n = x.size
+    for o in range(0, n, 32):
+        chunk = x[o:o + 32]
+        bound = np.abs(chunk).max() / 127.0 * 0.5 + 1e-6
+        assert np.abs(chunk - dec[o:o + 32]).max() <= bound
+
+
+@settings(max_examples=30, deadline=None)
+@given(hnp.arrays(np.float32, st.integers(8, 160),
+                  elements=st.floats(-50, 50, width=32)),
+       st.integers(1, 7))
+def test_codec_grouped_topk_keeps_group_maxima(x, kg):
+    """Stateless grouped top-k: within every group the surviving entries
+    are the kg largest magnitudes, and the payload is deterministic."""
+    from repro.comm.codec import grouped_topk_select_host
+    v1, i1 = grouped_topk_select_host(x, 8, kg)
+    v2, i2 = grouped_topk_select_host(x, 8, kg)
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(i1, i2)
+    nb = (x.size + 7) // 8
+    assert len(v1) == nb * kg
+    xp = np.zeros((nb * 8,), np.float32)
+    xp[:x.size] = x
+    for b in range(nb):
+        grp = np.abs(xp[b * 8:(b + 1) * 8])
+        kept = i1[(i1 >= b * 8) & (i1 < (b + 1) * 8)] - b * 8
+        assert len(kept) == kg
+        dropped = np.delete(grp, kept)
+        if dropped.size:
+            assert grp[kept].min() >= dropped.max() - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 4))
+def test_codec_delta_stream_converges(seed, rounds):
+    """delta+topk+int8 on a static stream: reconstruction error is
+    non-increasing round over round (error feedback drains the residual)."""
+    from repro.comm.codec import make_codec
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(256).astype(np.float32)
+    codec = make_codec("topk+int8")
+    errs = []
+    for _ in range(rounds + 1):
+        dec = codec.decode(codec.encode({"w": x}, peer=0), peer=0)
+        errs.append(float(np.abs(dec["w"] - x).max()))
+    assert errs[-1] <= errs[0] + 1e-6
+
+
 def test_adam_decreases_quadratic():
     opt = adam(lr=0.1)
     params = {"x": jnp.array([5.0, -3.0])}
