@@ -22,6 +22,19 @@ fi
 python -m pip install -q -r requirements-dev.txt \
     || echo "warning: dev extras not installed (offline?); continuing" >&2
 
+# fast style/import gate (best-effort: the container image ships no ruff
+# wheel; repro.analysis.lint below enforces the unused-import class anyway)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests
+else
+    echo "warning: ruff not installed; skipping style gate" >&2
+fi
+
+# static-analysis gate: trace every registered program and run the jaxpr +
+# convention lints (zero non-baselined findings required)
+echo "=== static analysis: repro.analysis.lint ==="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis.lint
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 if [[ "$SMOKE" == "1" ]]; then

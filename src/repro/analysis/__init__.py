@@ -1,0 +1,29 @@
+"""Static analysis of the repo's jitted programs (trace-time lint).
+
+Three layers (see ``analysis/README.md``):
+
+  * ``registry``    — ``@register_program`` decorator + runtime manifest:
+    every hot jitted entry point is traceable abstractly (no data, no
+    execution) from one place.
+  * ``lints``       — jaxpr passes over each traced program: dtype
+    widening beyond the declared wire dtypes, convert churn, host
+    callbacks inside scanned bodies, non-donated round-carried state,
+    dead code, and a static peak-intermediate-bytes estimate checked
+    against each program's declared budget.
+  * ``conventions`` — AST-level repo conventions: every Pallas kernel is
+    paired with a ref oracle + ops dispatcher + parity test, every
+    registered fast path names its host oracle, no unused imports, no
+    unreached seed modules without an allowlist entry.
+
+CLI gate: ``python -m repro.analysis.lint [--program NAME] [--json]``
+(wired into ``scripts/run_tier1.sh``), with ``baseline.json`` suppressing
+known findings so new ones fail loudly while old ones burn down.
+"""
+from repro.analysis.registry import (ProgramSpec, coverage, get_program,
+                                     iter_programs, load_all,
+                                     register_program, register_runtime)
+
+__all__ = [
+    "ProgramSpec", "coverage", "get_program", "iter_programs", "load_all",
+    "register_program", "register_runtime",
+]

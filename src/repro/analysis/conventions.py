@@ -1,0 +1,306 @@
+"""AST-level convention lints (no imports of the linted code).
+
+Repo conventions enforced here (see ROADMAP "Standing measured
+constraints" — every fast path keeps a host oracle):
+
+  * ``kernel-no-ref`` / ``kernel-ref-unwired`` / ``kernel-no-parity-test``
+    / ``kernel-module-unwired`` — every kernel module under
+    ``src/repro/kernels/`` must have a ``ref.py`` oracle
+    (``<dispatcher>_ref``), an ``ops.py`` dispatcher entry that actually
+    routes ``backend="ref"`` to it, and a parity test under ``tests/``.
+  * ``fast-path-no-oracle`` / ``fast-path-oracle-unresolved`` — every
+    registered program (the ``engine="stacked"`` / ``eval_backend=
+    "device"`` fast paths) must name its host oracle, and the dotted path
+    must resolve.
+  * ``unused-import`` — pyflakes-F401-style unused imports in ``src/``
+    and ``tests/`` (``__init__.py`` re-export modules are exempt).
+  * ``dead-module`` / ``seed-module`` — modules under ``repro.configs``
+    and ``repro.models`` that no registered program reaches through the
+    import graph: ``dead-module`` when no test reaches them either
+    (delete), ``seed-module`` when only LM-side tests keep them alive
+    (they stay only with an explicit allowlist entry in ``baseline.json``
+    stating why).
+
+All functions take the repo root explicitly so the analyzer's own tests
+can point them at synthetic known-bad trees.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.lints import Finding
+from repro.analysis.registry import ProgramSpec, resolve_oracle
+
+REPO = "<repo>"    # program slot for repo-level (non-program) findings
+
+
+def repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def _parse(path: Path) -> Optional[ast.AST]:
+    try:
+        return ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# kernel pairing: module <-> ref oracle <-> ops dispatcher <-> parity test
+# ---------------------------------------------------------------------------
+
+
+def lint_kernel_conventions(root: Path) -> List[Finding]:
+    kdir = root / "src" / "repro" / "kernels"
+    tests_dir = root / "tests"
+    out: List[Finding] = []
+    ops_path, ref_path = kdir / "ops.py", kdir / "ref.py"
+    if not ops_path.exists() or not ref_path.exists():
+        return [Finding("kernel-no-ref", REPO,
+                        f"kernels package at {kdir} lacks ops.py/ref.py")]
+    ops_tree = _parse(ops_path)
+    ref_defs = {n.name for n in ast.walk(_parse(ref_path))
+                if isinstance(n, ast.FunctionDef)}
+    test_text = "\n".join(p.read_text()
+                          for p in sorted(tests_dir.glob("test_*.py")))
+
+    dispatchers: List[ast.FunctionDef] = []
+    ops_imported_modules: Set[str] = set()
+    for node in ast.walk(ops_tree):
+        if isinstance(node, ast.FunctionDef):
+            if node.name.startswith("_"):      # helpers are not dispatchers
+                continue
+            args = node.args.args + node.args.kwonlyargs
+            if any(a.arg == "backend" for a in args):
+                dispatchers.append(node)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            ops_imported_modules.add(node.module)
+
+    for fn in dispatchers:
+        ref_name = f"{fn.name}_ref"
+        if ref_name not in ref_defs:
+            out.append(Finding(
+                "kernel-no-ref", REPO,
+                f"ops dispatcher `{fn.name}` has no `{ref_name}` oracle "
+                f"in kernels/ref.py"))
+        elif not any(isinstance(n, ast.Attribute) and n.attr == ref_name
+                     for n in ast.walk(fn)):
+            out.append(Finding(
+                "kernel-ref-unwired", REPO,
+                f"ops dispatcher `{fn.name}` never routes to "
+                f"`REF.{ref_name}` (backend=\"ref\" path missing)"))
+        if not re.search(rf"\b{re.escape(fn.name)}\b", test_text):
+            out.append(Finding(
+                "kernel-no-parity-test", REPO,
+                f"no test under tests/ exercises kernel dispatcher "
+                f"`{fn.name}` (ref-vs-kernel parity unguarded)"))
+
+    for mod in sorted(kdir.glob("*.py")):
+        stem = mod.stem
+        if stem in ("__init__", "ops", "ref"):
+            continue
+        if f"repro.kernels.{stem}" not in ops_imported_modules:
+            out.append(Finding(
+                "kernel-module-unwired", REPO,
+                f"kernel module kernels/{stem}.py has no ops.py "
+                f"dispatcher entry"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fast paths name their host oracle
+# ---------------------------------------------------------------------------
+
+
+def lint_fast_path_oracles(specs: Iterable[ProgramSpec]) -> List[Finding]:
+    out: List[Finding] = []
+    for spec in specs:
+        if not spec.oracle:
+            out.append(Finding(
+                "fast-path-no-oracle", spec.name,
+                "registered fast path declares no host oracle "
+                "(oracle=... on register_program)"))
+            continue
+        try:
+            resolve_oracle(spec.oracle)
+        except ImportError:
+            out.append(Finding(
+                "fast-path-oracle-unresolved", spec.name,
+                f"declared oracle {spec.oracle!r} does not resolve"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# unused imports (pyflakes F401, the AST way)
+# ---------------------------------------------------------------------------
+
+
+def _unused_imports_in_file(path: Path) -> List[Finding]:
+    tree = _parse(path)
+    if tree is None:
+        return []
+    bound: List = []         # (name, lineno, display)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                bound.append((name, node.lineno, a.name))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                bound.append((name, node.lineno,
+                              f"{node.module or '.'}.{a.name}"))
+    if not bound:
+        return []
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            used.add(node.attr)
+    # names re-exported via __all__ count as used
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets)):
+            for c in ast.walk(node.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    used.add(c.value)
+    return [Finding("unused-import", REPO,
+                    f"{path}:{lineno}: `{display}` imported as `{name}` "
+                    f"but never used")
+            for name, lineno, display in bound if name not in used]
+
+
+def lint_unused_imports(root: Path,
+                        subdirs: Iterable[str] = ("src", "tests")
+                        ) -> List[Finding]:
+    out: List[Finding] = []
+    for sub in subdirs:
+        for path in sorted((root / sub).rglob("*.py")):
+            if path.name == "__init__.py":      # re-export modules
+                continue
+            out.extend(_unused_imports_in_file(path))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dead / seed modules under configs/ and models/
+# ---------------------------------------------------------------------------
+
+
+def _module_name(src: Path, path: Path) -> str:
+    rel = path.relative_to(src).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _repro_imports(tree: ast.AST, modules: Set[str]) -> Set[str]:
+    """Module names under ``repro`` imported anywhere in the tree."""
+    out: Set[str] = set()
+
+    def add(name: str) -> None:
+        if name in modules:
+            out.add(name)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                add(a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            add(node.module)
+            for a in node.names:
+                add(f"{node.module}.{a.name}")   # from repro.x import submod
+    return out
+
+
+def build_import_graph(root: Path) -> Dict[str, Set[str]]:
+    """repro-module -> set of repro-modules it imports (package inits are
+    edges too: importing ``repro.configs`` pulls every config module)."""
+    src = root / "src"
+    files = {p: _module_name(src, p)
+             for p in sorted((src / "repro").rglob("*.py"))}
+    modules = set(files.values())
+    graph: Dict[str, Set[str]] = {m: set() for m in modules}
+    for path, mod in files.items():
+        tree = _parse(path)
+        if tree is None:
+            continue
+        graph[mod] |= _repro_imports(tree, modules)
+    return graph
+
+
+def _reach(graph: Dict[str, Set[str]], roots: Iterable[str]) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in graph]
+    while stack:
+        m = stack.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        stack.extend(graph.get(m, ()))
+        # importing a submodule imports its package __init__ too
+        while "." in m:
+            m = m.rsplit(".", 1)[0]
+            if m in graph and m not in seen:
+                seen.add(m)
+                stack.extend(graph.get(m, ()))
+    return seen
+
+
+def lint_dead_modules(root: Path, specs: Iterable[ProgramSpec],
+                      scopes: Iterable[str] = ("repro.configs",
+                                               "repro.models")
+                      ) -> List[Finding]:
+    graph = build_import_graph(root)
+    modules = set(graph)
+    test_roots: Set[str] = set()
+    for p in sorted((root / "tests").glob("*.py")):
+        tree = _parse(p)
+        if tree is not None:
+            test_roots |= _repro_imports(tree, modules)
+    registry_roots = {s.module for s in specs if s.module in modules}
+    from_registry = _reach(graph, registry_roots)
+    from_tests = _reach(graph, test_roots)
+    out: List[Finding] = []
+    for mod in sorted(modules):
+        if not any(mod == s or mod.startswith(s + ".") for s in scopes):
+            continue
+        if mod in from_registry:
+            continue
+        if mod in from_tests:
+            out.append(Finding(
+                "seed-module", REPO,
+                f"{mod} is reached by tests but by NO registered program "
+                f"(seed module: keep only with an allowlist entry)"))
+        else:
+            out.append(Finding(
+                "dead-module", REPO,
+                f"{mod} is reached by neither a registered program nor a "
+                f"test (delete, or allowlist with a reason)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_convention_lints(root: Path,
+                         specs: Iterable[ProgramSpec]) -> List[Finding]:
+    specs = list(specs)
+    out: List[Finding] = []
+    out += lint_kernel_conventions(root)
+    out += lint_fast_path_oracles(specs)
+    out += lint_unused_imports(root)
+    out += lint_dead_modules(root, specs)
+    return out

@@ -9,7 +9,6 @@ import json
 import os
 from typing import Any, Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -11,8 +11,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro.common.compat import axis_size, pcast_varying

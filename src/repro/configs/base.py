@@ -7,8 +7,6 @@ CPU-smoke variant (<=2 layers, d_model<=512, <=4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
 
 
 def _round_up(x: int, m: int) -> int:

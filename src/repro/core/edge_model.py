@@ -13,12 +13,10 @@ For the assigned large architectures the same split is realised as
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.common.axes import UNSHARDED
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,7 +14,8 @@ Distance metric switch (Table VI): ``metric`` ∈ {kl, cosine, euclidean}.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,13 +24,13 @@ import numpy as np
 from repro.common.pytree import (tree_bytes, tree_flatten_stacked,
                                  tree_unflatten_stacked)
 from repro.core import edge_model as EM
-from repro.core.adaptive import AdaptiveState, combine, init_adaptive
+from repro.core.adaptive import combine, init_adaptive
 from repro.core.aggregation import personalized_aggregate
 from repro.core.rehearsal import PrototypeMemory
 from repro.core.relevance import (DeviceRingHistory, RelevanceTracker,
                                   normalize_rows)
 from repro.core.tying import tying_loss
-from repro.federated.base import ClientState, StackedClientState, Strategy
+from repro.federated.base import ClientState, Strategy
 from repro.kernels import ops
 
 
@@ -222,7 +223,9 @@ class FedSTIL(Strategy):
             ratio = self.tracker.forgetting_ratio
             metric = self.tracker.metric
 
-            @jax.jit
+            # the ring buffer/validity are the round-carried server state:
+            # the caller overwrites both with the returns, so donate them
+            @functools.partial(jax.jit, donate_argnums=(0, 1))
             def relevance(buf, valid, feats):
                 from repro.core.relevance import _ring_push, ring_relevance
                 mask = jnp.ones((feats.shape[0],), jnp.float32)

@@ -9,7 +9,7 @@ tasks (oldest task's exemplars shrink first), replayed during training.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 

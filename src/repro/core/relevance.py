@@ -30,7 +30,6 @@ parameter-server tracker calls it for all clients at once.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Optional, Tuple
 
 import jax

@@ -20,7 +20,7 @@ All arrays are numpy, generated deterministically from the seed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import register_program
 from repro.evalreid.retrieval import evaluate_retrieval
 from repro.kernels import ops
 
@@ -147,6 +148,19 @@ def batched_retrieval_metrics(qf, qids, gf, gids, *, qmask=None, gmask=None,
     return out
 
 
+def _metrics_abstract():
+    """Bench-scale abstract eval inputs: C=100 clients x T=3 tasks."""
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    C, T, Q, G, F = 100, 3, 16, 96, 64
+    return ((S((C, T, Q, F), f32), S((C, T, Q), i32), S((C, G, F), f32),
+             S((C, G), i32), S((C, T, Q), f32), S((C, G), f32)),
+            {"ranks": (1, 3, 5), "backend": "ref", "max_matches": 4})
+
+
+@register_program(
+    "evalreid.batched_retrieval_metrics",
+    abstract_args=_metrics_abstract,
+    oracle="repro.evalreid.batched._metrics_host", budget_bytes=64 << 20)
 @functools.partial(jax.jit,
                    static_argnames=("ranks", "backend", "max_matches"))
 def _metrics_device(qf, qids, gf, gids, qmask, gmask, *, ranks, backend,

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import register_program
 from repro.comm.batched import BatchedCodec
 from repro.comm.codec import make_codec
 from repro.core import edge_model as EM
@@ -66,6 +67,23 @@ def _is_stackable(value) -> bool:
                or np.isscalar(l) for l in jax.tree.leaves(value))
 
 
+def _stacked_eval_abstract():
+    """Bench-scale abstract eval-round inputs (C=8 stacked clients)."""
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    cfg = EM.EdgeModelConfig()
+    C, T, Q, G, D = 8, 3, 16, 96, cfg.proto_dim
+    th = jax.eval_shape(lambda k: EM.init_adaptive_layers(k, cfg),
+                        jax.random.PRNGKey(0))
+    th = jax.tree.map(lambda l: S((C,) + l.shape, l.dtype), th)
+    return ((th, S((C, T, Q, D), f32), S((C, T, Q), i32), S((C, T), f32),
+             S((C, G, D), f32), S((C, G), i32), S((C, G), f32)),
+            {"ranks": (1, 3, 5), "kernel_backend": "ref", "max_matches": 4})
+
+
+@register_program(
+    "federated.stacked_eval",
+    abstract_args=_stacked_eval_abstract,
+    oracle="repro.federated.simulation._eval_round", budget_bytes=64 << 20)
 def stacked_eval_program(theta, qp, qids, task_mask, gp, gids, gmask, *,
                          ranks=(1, 3, 5), kernel_backend=None,
                          max_matches=None):
@@ -416,7 +434,10 @@ class Strategy:
         """One jit: vmap over clients of a lax.scan over pre-gathered epoch
         batches — replaces C×epochs per-client jit dispatches per round."""
         if "stacked_train" not in self._jit_cache:
-            @jax.jit
+            # trainable/opt_state are round-carried: the caller overwrites
+            # both with the returns, so the old buffers are donated (at
+            # C >> 1000 an undonated stacked state doubles peak memory)
+            @functools.partial(jax.jit, donate_argnums=(0, 1))
             def run(trainable, opt_state, extras, bx, by):
                 def one_client(tr, os, ex, px, py):
                     def estep(carry, batch):

@@ -52,7 +52,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,13 +11,12 @@
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_bytes, tree_scale, tree_zeros_like
+from repro.common.pytree import tree_bytes, tree_zeros_like
 from repro.core import edge_model as EM
 from repro.core.aggregation import fedavg_aggregate
 from repro.federated.base import ClientState, Strategy

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.registry import register_program
 from repro.kernels import ref as REF
 from repro.kernels.adaptive_combine import adaptive_combine as _combine
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -29,6 +30,18 @@ from repro.kernels.topk_pack import batched_topk_unpack as _buntopk
 
 DEFAULT_BACKEND = "auto"
 
+# ---- static-analysis registration (repro.analysis) -------------------------
+# Every dispatcher registers with bench-scale abstract shapes (C=100 clients,
+# P=4096 payload entries — where the BENCH_*.json sweeps top out) and
+# backend="ref" so the traced program is pallas_call-free. Tracing is lazy;
+# the decorator only records metadata.
+_S = jax.ShapeDtypeStruct
+_AC, _AP = 100, 4096                      # analysis-time client / payload dims
+
+
+def _f32(*shape):
+    return _S(shape, jnp.float32)
+
 
 def _dispatch(backend):
     b = backend or DEFAULT_BACKEND
@@ -39,6 +52,11 @@ def _dispatch(backend):
     return b
 
 
+@register_program(
+    "kernels.flash_attention",
+    abstract_args=lambda: ((_f32(2, 4, 128, 64),) * 3,
+                           {"causal": True, "backend": "ref"}),
+    oracle="repro.kernels.ref.flash_attention_ref", budget_bytes=64 << 20)
 @functools.partial(jax.jit, static_argnames=("causal", "backend"))
 def flash_attention(q, k, v, *, causal: bool = True, backend: str = None):
     b = _dispatch(backend)
@@ -47,6 +65,11 @@ def flash_attention(q, k, v, *, causal: bool = True, backend: str = None):
     return _flash(q, k, v, causal=causal, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.pairwise_dist",
+    abstract_args=lambda: ((_f32(128, 64), _f32(256, 64)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.pairwise_dist_ref", budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("backend",))
 def pairwise_dist(q, g, *, backend: str = None):
     b = _dispatch(backend)
@@ -55,6 +78,12 @@ def pairwise_dist(q, g, *, backend: str = None):
     return _pdist(q, g, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.batched_pairwise_dist",
+    abstract_args=lambda: ((_f32(_AC, 48, 64), _f32(_AC, 96, 64)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.batched_pairwise_dist_ref",
+    budget_bytes=64 << 20)
 @functools.partial(jax.jit, static_argnames=("backend",))
 def batched_pairwise_dist(q, g, *, backend: str = None):
     """(C, Q, D) x (C, G, D) -> (C, Q, G): all clients' distance matrices
@@ -65,6 +94,10 @@ def batched_pairwise_dist(q, g, *, backend: str = None):
     return _bpdist(q, g, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.adaptive_combine",
+    abstract_args=lambda: ((_f32(_AC, _AP),) * 3, {"backend": "ref"}),
+    oracle="repro.kernels.ref.adaptive_combine_ref", budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("backend",))
 def adaptive_combine(base, alpha, a, *, backend: str = None):
     b = _dispatch(backend)
@@ -73,6 +106,12 @@ def adaptive_combine(base, alpha, a, *, backend: str = None):
     return _combine(base, alpha, a, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.relevance_aggregate",
+    abstract_args=lambda: ((_f32(_AC, _AC), _f32(_AC, _AP)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.relevance_aggregate_ref",
+    budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("backend",))
 def relevance_aggregate(w, thetas, *, backend: str = None):
     b = _dispatch(backend)
@@ -81,6 +120,12 @@ def relevance_aggregate(w, thetas, *, backend: str = None):
     return _agg(w, thetas, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.fused_relevance_aggregate",
+    abstract_args=lambda: ((_f32(_AC, _AC), _f32(_AC, _AP)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.fused_relevance_aggregate_ref",
+    budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("backend",))
 def fused_relevance_aggregate(w, thetas, *, backend: str = None):
     """Diag-mask + row-normalize + W @ Θ in one program -> (B, Wn)."""
@@ -90,6 +135,11 @@ def fused_relevance_aggregate(w, thetas, *, backend: str = None):
     return _fused_agg(w, thetas, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.batched_quantize",
+    abstract_args=lambda: ((_f32(_AC, _AP),),
+                           {"chunk": 256, "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_quantize_ref", budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("chunk", "backend"))
 def batched_quantize(x, *, chunk: int = 256, backend: str = None):
     """Wire-codec quantize stage: (C, P) fp32 -> ((C, P) int8, per-chunk
@@ -100,6 +150,13 @@ def batched_quantize(x, *, chunk: int = 256, backend: str = None):
     return _bquant(x, chunk=chunk, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.batched_dequantize",
+    abstract_args=lambda: ((_S((_AC, _AP), jnp.int8),
+                            _f32(_AC, _AP // 256)),
+                           {"chunk": 256, "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_dequantize_ref",
+    budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("chunk", "backend"))
 def batched_dequantize(q, scales, *, chunk: int = 256, backend: str = None):
     b = _dispatch(backend)
@@ -108,6 +165,11 @@ def batched_dequantize(q, scales, *, chunk: int = 256, backend: str = None):
     return _bdequant(q, scales, chunk=chunk, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.batched_topk_pack",
+    abstract_args=lambda: ((_f32(_AC, _AP),),
+                           {"group": 8, "kg": 2, "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_topk_pack_ref", budget_bytes=32 << 20)
 @functools.partial(jax.jit, static_argnames=("group", "kg", "backend"))
 def batched_topk_pack(x, *, group: int = 8, kg: int, backend: str = None):
     """Wire-codec sparsify stage: (C, P) -> (values (C, ceil(P/group)*kg),
@@ -119,6 +181,14 @@ def batched_topk_pack(x, *, group: int = 8, kg: int, backend: str = None):
     return _btopk(x, group=group, kg=kg, interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.batched_topk_unpack",
+    abstract_args=lambda: ((_f32(_AC, _AP // 8 * 2),
+                            _S((_AC, _AP // 8 * 2), jnp.int32)),
+                           {"p": _AP, "group": 8, "kg": 2,
+                            "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_topk_unpack_ref",
+    budget_bytes=32 << 20)
 @functools.partial(jax.jit, static_argnames=("p", "group", "kg", "backend"))
 def batched_topk_unpack(vals, idx, *, p: int, group: int = 8, kg: int,
                         backend: str = None):
@@ -129,6 +199,11 @@ def batched_topk_unpack(vals, idx, *, p: int, group: int = 8, kg: int,
                     interpret=(b == "interpret"))
 
 
+@register_program(
+    "kernels.kl_similarity",
+    abstract_args=lambda: ((_f32(64, 128), _f32(48, 128)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.kl_similarity_ref", budget_bytes=16 << 20)
 @functools.partial(jax.jit, static_argnames=("backend",))
 def kl_similarity(a, b_, *, backend: str = None):
     b = _dispatch(backend)

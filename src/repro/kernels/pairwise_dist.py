@@ -6,7 +6,6 @@ the inner product on the MXU; tiles (q_block x D) x (g_block x D).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -29,7 +29,6 @@ else:
         "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +36,6 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.common.axes import AxisCtx
 from repro.common.compat import set_mesh, shard_map
 from repro.common.pytree import tree_flatten_concat, tree_unflatten_concat
 from repro.core.relevance import decayed_relevance
@@ -219,7 +217,6 @@ def _lower(arch: str, multi_pod: bool):
         compiled = fn.lower(theta, feats, hists).compile()
     from repro.sharding.analysis import parse_collectives
     coll = parse_collectives(compiled.as_text())
-    from repro.common.pytree import tree_bytes
     print(f"fed_round lowered for {arch} on {'2x16x16' if multi_pod else '16x16'}")
     print(f"  adaptive payload/client: "
           f"{sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree.leaves(theta))/C/1e6:.1f} MB")

@@ -8,7 +8,6 @@ All train locally with no server exchange (comm = 0 / NaN in the paper).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +15,7 @@ import numpy as np
 
 from repro.common.pytree import tree_bytes, tree_zeros_like
 from repro.core import edge_model as EM
-from repro.federated.base import ClientState, Strategy
+from repro.federated.base import Strategy
 
 
 class STL(Strategy):

@@ -13,14 +13,11 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.common.axes import AxisCtx, UNSHARDED

@@ -13,12 +13,9 @@ Families:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.common.axes import AxisCtx, UNSHARDED

@@ -9,9 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional
+from typing import Dict
 
-import numpy as np
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -21,6 +20,35 @@ _DTYPE_BYTES = {
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
+
+# numpy/ml_dtypes name -> HLO short name (same width table as above, so
+# the jaxpr-level analyses in repro.analysis price dtypes identically to
+# the HLO-level parsing here)
+_NP_TO_HLO = {
+    "float64": "f64", "float32": "f32", "float16": "f16", "bfloat16": "bf16",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+    "int64": "s64", "uint64": "u64", "int32": "s32", "uint32": "u32",
+    "int16": "s16", "uint16": "u16", "int8": "s8", "uint8": "u8",
+    "bool": "pred", "complex64": "c64", "complex128": "c128",
+}
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per element for a numpy/ml_dtypes dtype (table-driven, with
+    ``itemsize`` as the fallback for exotic types)."""
+    name = getattr(dtype, "name", str(dtype))
+    hlo = _NP_TO_HLO.get(name, name)
+    if hlo in _DTYPE_BYTES:
+        return _DTYPE_BYTES[hlo]
+    return int(getattr(dtype, "itemsize", 4))
+
+
+def aval_bytes(shape, dtype) -> int:
+    """Total bytes of an abstract value (shape x dtype width)."""
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * dtype_bytes(dtype)
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(

@@ -7,11 +7,9 @@ dry-run hands to jax.jit/shard_map.
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig

@@ -5,8 +5,7 @@ trains with Adam(lr=1e-3, weight_decay=1e-5).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,12 +8,10 @@ reduced configs (smoke tests, quickstart, e2e driver).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.common.axes import AxisCtx, UNSHARDED
 from repro.configs.base import ModelConfig

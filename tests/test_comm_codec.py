@@ -10,7 +10,7 @@ import pytest
 
 from repro.comm.accounting import CommLog
 from repro.comm.batched import BatchedCodec
-from repro.comm.codec import (PipelineCodec, grouped_topk_select_host,
+from repro.comm.codec import (grouped_topk_select_host,
                               make_codec, quantize_host, topk_select_host)
 from repro.core import FedSTIL
 from repro.core.edge_model import EdgeModelConfig

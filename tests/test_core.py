@@ -1,5 +1,4 @@
 """Unit tests for the FedSTIL core (paper equations 2-6, rehearsal, tying)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,7 @@
 """ReID retrieval metric correctness (mAP / CMC)."""
 import numpy as np
 
-from repro.evalreid import distance_matrix, evaluate_retrieval, l2_normalize
+from repro.evalreid import distance_matrix, evaluate_retrieval
 
 
 def test_distance_matrix_identity():
