@@ -113,10 +113,12 @@ def bench_comm_round(Cs=(5, 20, 100), *, iters=5, out=DEFAULT_OUT,
         print(f"{C},{case['host_ms']:.2f},{case['batched_ms']:.2f},"
               f"{case['speedup']:.1f}x,{wire},{case['reduction']:.3f}",
               flush=True)
+    from benchmarks.common import mesh_metadata
     from repro.analysis.registry import coverage
     cov = coverage()
     payload = {
         "bench": "comm_round",
+        "env": mesh_metadata(),
         "config": {"P": P, "codec": SPEC, "iters": iters,
                    "backend": jax.default_backend()},
         "analysis_coverage": {k: cov[k] for k in ("programs_registered",

@@ -66,3 +66,21 @@ def run(name: str, *, rounds=ROUNDS, seed=0, verbose=False, **kw):
 
 def csv_row(name: str, wall_s: float, derived: str):
     print(f"{name},{wall_s * 1e6:.0f},{derived}", flush=True)
+
+
+def mesh_metadata() -> dict:
+    """Device/mesh environment stamped into every BENCH_*.json metadata
+    block: backend, device count, and the engine mesh this process would
+    build — so a perf trajectory is never compared across unequal meshes
+    (an 8-device forced host run and a 1-device run are different
+    experiments)."""
+    import jax
+
+    from repro.sharding import specs as shard_specs
+    mesh = shard_specs.engine_mesh()
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "mesh": {"axes": list(mesh.axis_names),
+                 "shape": [int(mesh.shape[a]) for a in mesh.axis_names]},
+    }

@@ -116,10 +116,12 @@ def bench_eval_round(Cs=(5, 20, 100), *, n_tasks=2, iters=4,
         cases.append(case)
         print(f"{C},{case['host_ms']:.2f},{case['host_cached_ms']:.2f},"
               f"{case['device_ms']:.2f},{case['speedup']:.1f}x", flush=True)
+    from benchmarks.common import mesh_metadata
     from repro.analysis.registry import coverage
     cov = coverage()
     payload = {
         "bench": "eval_round",
+        "env": mesh_metadata(),
         "config": {"n_tasks": n_tasks, "iters": iters,
                    "backend": jax.default_backend()},
         "analysis_coverage": {k: cov[k] for k in ("programs_registered",

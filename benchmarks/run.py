@@ -5,8 +5,10 @@
 host-vs-stacked server-round sweep (``BENCH_server_round.json``);
 ``--bench eval`` runs the host-vs-batched eval-round sweep
 (``BENCH_eval_round.json``); ``--bench comm`` runs the wire-codec
-host-loop-vs-batched encode/decode sweep (``BENCH_comm_round.json``) —
-the machine-readable perf trajectories future PRs regress against.
+host-loop-vs-batched encode/decode sweep (``BENCH_comm_round.json``);
+``--bench mesh`` runs the stacked-vs-sharded server-round C→10k scaling
+sweep on a forced 8-device host mesh (``BENCH_mesh_round.json``) — the
+machine-readable perf trajectories future PRs regress against.
 """
 import argparse
 import sys
@@ -18,7 +20,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="table2|table3|table4|table5|table6|fig6|fig8|kernels")
     ap.add_argument("--bench", default=None,
-                    choices=["server", "eval", "comm"],
+                    choices=["server", "eval", "comm", "mesh"],
                     help="perf-trajectory benches (JSON output)")
     args = ap.parse_args()
 
@@ -35,6 +37,12 @@ def main() -> None:
     if args.bench == "comm":
         from benchmarks.comm_round import bench_comm_round
         bench_comm_round()
+        if args.only is None:
+            return
+    if args.bench == "mesh":
+        # mesh_round sets XLA_FLAGS at import time, before jax loads
+        from benchmarks.mesh_round import bench_mesh_round
+        bench_mesh_round()
         if args.only is None:
             return
 

@@ -81,10 +81,12 @@ def bench_server_round(Cs=(5, 20, 100), *, D=128, iters=8, out=DEFAULT_OUT):
         cases.append(case)
         print(f"{C},{case['host_ms']:.2f},{case['stacked_ms']:.2f},"
               f"{case['speedup']:.1f}x", flush=True)
+    from benchmarks.common import mesh_metadata
     from repro.analysis.registry import coverage
     cov = coverage()
     payload = {
         "bench": "server_round",
+        "env": mesh_metadata(),
         "config": {"D": D, "history_len": 6, "iters": iters,
                    "params_per_client": tree_size(thetas[0]),
                    "backend": jax.default_backend()},

@@ -8,8 +8,11 @@
 #            a 2-round FedSTIL simulation on engine="stacked", the
 #            `--only relevance` kernel-bench sweep, a 1-eval smoke of
 #            the batched eval-round bench (device vs host-loop parity),
-#            and the wire-codec comm bench at C=5 (1-round encode/decode
-#            host-vs-batched parity assert).
+#            the wire-codec comm bench at C=5 (1-round encode/decode
+#            host-vs-batched parity assert), a 2-round engine="sharded"
+#            simulation on a forced 8-device host mesh (stacked-parity
+#            assert), and the mesh scaling bench at C=100
+#            (sharded-vs-stacked aggregate parity).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -64,4 +67,30 @@ EOF
     echo "=== smoke: wire-codec comm round (host loop vs batched, parity) ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.comm_round --smoke
+    echo "=== smoke: 2-round engine=\"sharded\" simulation, 8-device mesh ==="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.core import FedSTIL
+from repro.core.edge_model import EdgeModelConfig
+from repro.data import FederatedReIDBenchmark
+from repro.federated import run_simulation
+
+bench = FederatedReIDBenchmark(n_clients=3, n_tasks=2, n_identities=40,
+                               ids_per_task=8, samples_per_id=6, seed=0)
+cfg = EdgeModelConfig(n_classes=bench.n_classes)
+mk = lambda: FedSTIL(cfg, n_clients=3, epochs=2, wire_dtype="float32")
+sharded = run_simulation(mk(), bench, rounds=2, eval_every=2,
+                         engine="sharded")
+stacked = run_simulation(mk(), bench, rounds=2, eval_every=2,
+                         engine="stacked")
+assert abs(sharded.final("mAP") - stacked.final("mAP")) < 1e-6
+assert sharded.comm.total_c2s == stacked.comm.total_c2s
+print(f"sharded smoke OK: 8 devices, C=3 padded, "
+      f"mAP={sharded.final('mAP'):.4f} == stacked, comm bytes equal")
+EOF
+    echo "=== smoke: mesh scaling bench (stacked vs sharded aggregate) ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.mesh_round --smoke
 fi

@@ -126,7 +126,12 @@ def lint_dtypes(closed: core.ClosedJaxpr, spec: ProgramSpec) -> List[Finding]:
 
 def lint_convert_churn(closed: core.ClosedJaxpr,
                        spec: ProgramSpec) -> List[Finding]:
-    """Flag A→B→A convert_element_type round-trips (per jaxpr level)."""
+    """Flag A→B→A convert_element_type round-trips (per jaxpr level).
+
+    A round-trip whose BOTH legs are in ``spec.sanctioned_casts`` —
+    e.g. the engine's f32→bf16 wire cast and the server's bf16→f32
+    upcast from ``common/precision.py`` — is a declared precision
+    boundary, not churn, and is skipped."""
     out: List[Finding] = []
     for jaxpr in iter_jaxprs(closed.jaxpr):
         produced = {}
@@ -137,12 +142,15 @@ def lint_convert_churn(closed: core.ClosedJaxpr,
             dst = eqn.outvars[0]
             if isinstance(src, core.Var) and src in produced:
                 orig = produced[src]
+                mid = getattr(src.aval, "dtype", None)
                 if getattr(dst.aval, "dtype", None) == orig:
-                    out.append(Finding(
-                        "convert-churn", spec.name,
-                        f"{orig.name} -> "
-                        f"{getattr(src.aval, 'dtype', '?').name} -> "
-                        f"{orig.name} convert round-trip"))
+                    mid_name = getattr(mid, "name", "?")
+                    legs = {(orig.name, mid_name), (mid_name, orig.name)}
+                    if not legs <= spec.sanctioned_casts:
+                        out.append(Finding(
+                            "convert-churn", spec.name,
+                            f"{orig.name} -> {mid_name} -> "
+                            f"{orig.name} convert round-trip"))
             if isinstance(src, (core.Var, core.Literal)):
                 dt = getattr(src.aval, "dtype", None)
                 if dt is not None:

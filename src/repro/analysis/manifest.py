@@ -61,8 +61,10 @@ def _register_fedstil() -> None:
         return jax.tree.map(lambda l: _SDS((_C,) + l.shape[1:], l.dtype),
                             tree)
 
+    # the ring push takes the per-client participation mask (all-ones on
+    # the stacked engine, the client-validity mask on the sharded engine)
     ring_args = (_SDS((_C, _HIST, D), _F32), _SDS((_C, _HIST), _F32),
-                 _SDS((_C, D), _F32))
+                 _SDS((_C, D), _F32), _SDS((_C,), _F32))
 
     register_runtime(
         "federated.fedstil_server_relevance", relevance,
@@ -71,12 +73,12 @@ def _register_fedstil() -> None:
         oracle="repro.core.relevance.RelevanceTracker.relevance",
         carry=(0, 1), donate=(0, 1), budget_bytes=64 << 20)
 
-    def server_round(buf, valid, feats, theta_flat):
+    def server_round(buf, valid, feats, mask, theta_flat):
         """The full staged stacked server round (FedSTIL
         ``server_round_stacked`` data path) as one traceable program:
         ring push + Eq. 4/5 relevance, the fused Eq. 5→6 kernel,
         unflatten, and the nz row mask."""
-        buf, valid, w_raw = relevance(buf, valid, feats)
+        buf, valid, w_raw = relevance(buf, valid, feats, mask)
         b_flat, wn = ops.fused_relevance_aggregate(w_raw, theta_flat,
                                                    backend="ref")
         nz = jnp.sum(wn, axis=1) > 0
@@ -88,6 +90,30 @@ def _register_fedstil() -> None:
         module="repro.core.fedstil",
         oracle="repro.core.fedstil.FedSTIL.server_round",
         carry=(0, 1), donate=(0, 1), budget_bytes=128 << 20)
+
+    # engine="sharded" server stages, built against a 1x1 engine mesh (the
+    # layouts are shape-preserving, so the trace is device-count
+    # independent). The composite crosses the flatten->aggregate stage
+    # boundary in wire_dtype: the f32->bf16->f32 pair is the sanctioned
+    # wire cast of common/precision.py, not convert churn.
+    from repro.common.precision import WIRE_CASTS
+    strat.mesh = jax.make_mesh((1, 1), ("data", "model"))
+    flatten_wire, aggregate = strat._sharded_server_fns(theta_example)
+
+    def sharded_server_round(buf, valid, feats, mask, theta):
+        buf, valid, w_raw = relevance(buf, valid, feats, mask)
+        b_flat, wn = aggregate(w_raw, flatten_wire(theta))
+        nz = jnp.sum(wn, axis=1) > 0
+        return buf, valid, unflatten(b_flat), nz
+
+    register_runtime(
+        "federated.sharded_server_round", sharded_server_round,
+        abstract_args=lambda: (
+            ring_args + (_stretch(_sds_like(theta_example)),), {}),
+        module="repro.core.fedstil",
+        oracle="repro.core.fedstil.FedSTIL.server_round",
+        carry=(0, 1), donate=(0, 1), budget_bytes=128 << 20,
+        sanctioned_casts=WIRE_CASTS)
 
     epochs, batch = strat.epochs, strat.batch
     register_runtime(
@@ -145,21 +171,19 @@ def _register_comm() -> None:
         budget_bytes=32 << 20)
 
 
-def _register_launch() -> None:
-    # initialize the backend BEFORE importing the launch modules: their
-    # CLI-oriented XLA_FLAGS setdefault must not decide this process's
-    # device count
-    jax.devices()
-    from repro.launch.eval_round import sharded_eval_round
-    from repro.launch.fed_round import sharded_fused_aggregate
+def _register_sharded() -> None:
+    # the engine's two standalone mesh programs (the launch CLIs are thin
+    # demo harnesses around these — exactly one sharded implementation)
+    from repro.core.fedstil import sharded_fused_aggregate
+    from repro.federated.base import sharded_eval_fn
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     register_runtime(
-        "launch.sharded_fused_aggregate",
+        "federated.sharded_aggregate",
         functools.partial(sharded_fused_aggregate, mesh=mesh),
         abstract_args=lambda: ((_SDS((_C, _C), _F32),
                                 _SDS((_C, 4096), _F32)), {}),
-        module="repro.launch.fed_round",
+        module="repro.core.fedstil",
         oracle="repro.kernels.ref.fused_relevance_aggregate_ref",
         budget_bytes=64 << 20)
 
@@ -171,8 +195,8 @@ def _register_launch() -> None:
     C, T, Q, G = 8, 3, 16, 96
     th_sds = jax.tree.map(lambda l: _SDS((C,) + l.shape, l.dtype), th)
     register_runtime(
-        "launch.sharded_eval_round",
-        functools.partial(sharded_eval_round, mesh=mesh),
+        "federated.sharded_eval",
+        sharded_eval_fn(mesh, kernel_backend="ref"),
         abstract_args=lambda: ((th_sds,
                                 _SDS((C, T, Q, cfg.proto_dim), _F32),
                                 _SDS((C, T, Q), _I32),
@@ -180,11 +204,11 @@ def _register_launch() -> None:
                                 _SDS((C, G, cfg.proto_dim), _F32),
                                 _SDS((C, G), _I32),
                                 _SDS((C, G), _F32)), {}),
-        module="repro.launch.eval_round",
+        module="repro.federated.base",
         oracle="repro.federated.simulation._eval_round",
         budget_bytes=64 << 20)
 
 
 _register_fedstil()
 _register_comm()
-_register_launch()
+_register_sharded()

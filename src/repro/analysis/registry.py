@@ -75,6 +75,11 @@ class ProgramSpec:
     budget_bytes: int = DEFAULT_BUDGET_BYTES
     allowed_dtypes: frozenset = DEFAULT_ALLOWED_DTYPES
     allow_callbacks: bool = False
+    # (src, dst) convert_element_type pairs this program performs on
+    # purpose (e.g. the bf16 wire cast from common/precision.py). The
+    # convert-churn lint skips A->B->A round-trips whose both legs are
+    # sanctioned; everything else still fails.
+    sanctioned_casts: frozenset = frozenset()
 
     def build_args(self) -> Tuple[tuple, dict]:
         return self.abstract_args()
@@ -96,7 +101,7 @@ def _register(spec: ProgramSpec) -> None:
 def register_program(name: str, *, abstract_args, oracle=None, carry=(),
                      donate=(), budget_bytes=DEFAULT_BUDGET_BYTES,
                      allowed_dtypes=DEFAULT_ALLOWED_DTYPES,
-                     allow_callbacks=False):
+                     allow_callbacks=False, sanctioned_casts=frozenset()):
     """Decorator: record ``fn`` as the traceable program ``name``."""
 
     def wrap(fn):
@@ -106,7 +111,8 @@ def register_program(name: str, *, abstract_args, oracle=None, carry=(),
             carry=tuple(carry), donate=tuple(donate),
             budget_bytes=budget_bytes,
             allowed_dtypes=frozenset(allowed_dtypes),
-            allow_callbacks=allow_callbacks))
+            allow_callbacks=allow_callbacks,
+            sanctioned_casts=frozenset(sanctioned_casts)))
         return fn
 
     return wrap
@@ -122,7 +128,8 @@ def register_runtime(name: str, fn: Callable, *, abstract_args, module: str,
         budget_bytes=kw.get("budget_bytes", DEFAULT_BUDGET_BYTES),
         allowed_dtypes=frozenset(
             kw.get("allowed_dtypes", DEFAULT_ALLOWED_DTYPES)),
-        allow_callbacks=kw.get("allow_callbacks", False))
+        allow_callbacks=kw.get("allow_callbacks", False),
+        sanctioned_casts=frozenset(kw.get("sanctioned_casts", ())))
     _register(spec)
 
 

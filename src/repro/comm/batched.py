@@ -64,11 +64,15 @@ class BatchedCodec:
                 buffers["values"] = vals
             return buffers
 
+        kk = self.k
+
         @jax.jit
         def _enc_sparse(x):
             vals, idx = ops.batched_topk_pack(x, group=group, kg=kg,
                                               backend=backend)
-            return _quant(vals, {"indices": idx})
+            packed = ops.batched_idx_bitpack(idx, group=group, kg=kg,
+                                             backend=backend)
+            return _quant(vals, {"idx_bits": packed})
 
         @jax.jit
         def _enc_dense(x):
@@ -85,8 +89,10 @@ class BatchedCodec:
 
         @jax.jit
         def _dec_sparse(buffers):
-            return ops.batched_topk_unpack(_dequant(buffers),
-                                           buffers["indices"], p=pp,
+            idx = ops.batched_idx_bitunpack(buffers["idx_bits"], k=kk,
+                                            group=group, kg=kg,
+                                            backend=backend)
+            return ops.batched_topk_unpack(_dequant(buffers), idx, p=pp,
                                            group=group, kg=kg,
                                            backend=backend)
 
@@ -101,7 +107,7 @@ class BatchedCodec:
 
     # ---- wire ----------------------------------------------------------------
     def _dec(self, buffers):
-        return (self._dec_sparse(buffers) if "indices" in buffers
+        return (self._dec_sparse(buffers) if "idx_bits" in buffers
                 else self._dec_dense(buffers))
 
     def _encode_residual(self, x):

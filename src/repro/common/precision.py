@@ -1,0 +1,41 @@
+"""Precision policy for the mesh engine: bf16 on the wire, fp32 in state.
+
+The mesh-transformer-jax exemplar (SNIPPETS.md) keeps optimizer state in
+fp32 and casts activations/wire traffic to bf16 at shard boundaries. The
+sharded federated engine follows the same rule: the flattened ``(C, P)``
+upload rows that cross the ``data``/``model`` shard boundary travel as
+bf16, and the server upcasts back to fp32 before the relevance-weighted
+aggregate (whose normalizer psum must stay fp32 — bf16 accumulation of
+10k relevance weights loses the low-order mass).
+
+``to_bf16``/``to_f32`` are pytree-wide casts that only touch float
+leaves: int8/int32 wire buffers, bool masks, and index arrays pass
+through untouched, so they are safe to apply to mixed codec buffer
+dicts. Programs that contain an intentional f32 -> bf16 -> f32
+round-trip declare it via ``ProgramSpec.sanctioned_casts`` so the
+convert-churn lint knows it is a wire cast, not churn.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# the (src, dst) convert pairs the analysis convert-churn lint accepts in
+# programs that declare them: the wire cast down and its matching upcast
+WIRE_CASTS = frozenset({("float32", "bfloat16"), ("bfloat16", "float32")})
+
+
+def _cast_floating(x, dtype):
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        return jnp.asarray(x).astype(dtype)
+    return x
+
+
+def to_bf16(tree):
+    """Cast every floating leaf to bfloat16 (wire / cross-shard form)."""
+    return jax.tree.map(lambda x: _cast_floating(x, jnp.bfloat16), tree)
+
+
+def to_f32(tree):
+    """Cast every floating leaf to float32 (state / accumulate form)."""
+    return jax.tree.map(lambda x: _cast_floating(x, jnp.float32), tree)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.precision import to_bf16, to_f32
 from repro.common.pytree import (tree_bytes, tree_flatten_stacked,
                                  tree_unflatten_stacked)
 from repro.core import edge_model as EM
@@ -34,6 +35,39 @@ from repro.federated.base import ClientState, Strategy
 from repro.kernels import ops
 
 
+def sharded_fused_aggregate(w, thetas, mesh, *, backend=None):
+    """The engine's jit-with-NamedSharding Eq. 5→6 aggregate over a real
+    mesh — layouts come from ``sharding.specs.stacked_aggregate_specs``
+    (the single source of truth; the old ``launch/fed_round`` demo that
+    re-derived them privately is gone).
+
+    Θ (C, P) rows live on the "data" axis, W contracts its columns against
+    them, and the output base matrix keeps the client-row sharding so the
+    per-device footprint stays C/d × P at every stage. GSPMD lowers the
+    contraction to per-shard partial products plus one reduce over "data"
+    (the relevance normalizer inside the kernel is the one psum). Values
+    are bit-identical to ``ops.fused_relevance_aggregate`` on one device —
+    tier-1 asserts it.
+    """
+    from jax.sharding import NamedSharding
+    from repro.sharding.specs import stacked_aggregate_specs
+    sp = stacked_aggregate_specs()
+    key = (mesh, backend)
+    if key not in _SHARDED_AGG_CACHE:
+        _SHARDED_AGG_CACHE[key] = jax.jit(
+            functools.partial(ops.fused_relevance_aggregate,
+                              backend=backend),
+            out_shardings=(NamedSharding(mesh, sp["out"]),
+                           NamedSharding(mesh, sp["wn"])))
+    w = jax.device_put(jnp.asarray(w), NamedSharding(mesh, sp["w"]))
+    thetas = jax.device_put(jnp.asarray(thetas),
+                            NamedSharding(mesh, sp["thetas"]))
+    return _SHARDED_AGG_CACHE[key](w, thetas)
+
+
+_SHARDED_AGG_CACHE: dict = {}
+
+
 class FedSTIL(Strategy):
     name = "fedstil"
     uses_server = True
@@ -42,8 +76,15 @@ class FedSTIL(Strategy):
     def __init__(self, cfg, *, n_clients=5, metric="kl", forgetting_ratio=0.5,
                  history_len=6, memory_size=2000, per_identity=8,
                  lam_tie=1e-4, st_integration=True, rehearsal=True,
-                 tying=True, server_backend=None, **kw):
+                 tying=True, server_backend=None, wire_dtype="bfloat16",
+                 **kw):
         super().__init__(cfg, **kw)
+        # sharded-engine precision rule (common/precision.py): the (C, P)
+        # flatten that crosses the shard boundary is emitted in wire_dtype
+        # (bf16 default — half the resident/resharded bytes) and upcast to
+        # f32 inside the aggregate; "float32" turns the cast off for
+        # bit-tight parity runs. Optimizer/BN state is always f32.
+        self.wire_dtype = wire_dtype
         self.n_clients = n_clients
         self.lam_tie = lam_tie
         self.st_integration = st_integration
@@ -196,15 +237,27 @@ class FedSTIL(Strategy):
         stacked.extras["reg_prev_theta"] = theta
 
         if self.use_rehearsal:
+            # host memories exist only for the C real clients; on a mesh
+            # theta carries Cp >= C padded rows, so slice before the vmap
+            C = len(protos_list)
+            theta_real = jax.tree.map(lambda l: l[:C], theta)
             protos = jnp.asarray(np.stack(protos_list))      # (C, N, D)
             outputs = np.asarray(jax.vmap(
-                lambda th, p: EM.adaptive_forward(th, p)[0])(theta, protos))
+                lambda th, p: EM.adaptive_forward(th, p)[0])(theta_real,
+                                                             protos))
             for c, mem in enumerate(stacked.host["memory"]):
                 mem.add_task(protos_list[c], labels_list[c], outputs[c],
                              task_id=rnd)
 
         feats = np.stack([np.asarray(p, np.float32).mean(0)
                           for p in protos_list])
+        lead = jax.tree.leaves(theta)[0].shape[0]
+        if lead > feats.shape[0]:
+            # mesh padding rows: zero features — the validity mask keeps
+            # them out of the relevance ring, so the values never matter
+            feats = np.concatenate(
+                [feats, np.zeros((lead - feats.shape[0], feats.shape[1]),
+                                 np.float32)])
         return stacked, {"theta": theta, "task_feature": jnp.asarray(feats)}
 
     def _stacked_server_fns(self, theta_example):
@@ -224,11 +277,15 @@ class FedSTIL(Strategy):
             metric = self.tracker.metric
 
             # the ring buffer/validity are the round-carried server state:
-            # the caller overwrites both with the returns, so donate them
+            # the caller overwrites both with the returns, so donate them.
+            # ``mask`` is the per-client push mask — all-ones on the
+            # single-device stacked engine, the client-validity mask on the
+            # sharded engine (padding rows must never enter the ring: a
+            # zero mask keeps their history invalid, so their W rows AND
+            # columns stay zero and the nz machinery leaves them alone).
             @functools.partial(jax.jit, donate_argnums=(0, 1))
-            def relevance(buf, valid, feats):
+            def relevance(buf, valid, feats, mask):
                 from repro.core.relevance import _ring_push, ring_relevance
-                mask = jnp.ones((feats.shape[0],), jnp.float32)
                 buf, valid = _ring_push(buf, valid, feats, mask)
                 W = ring_relevance(buf, valid, forgetting_ratio=ratio,
                                    metric=metric, backend=backend)
@@ -244,10 +301,51 @@ class FedSTIL(Strategy):
                 self._jit_cache["stacked_flatten"],
                 self._jit_cache["stacked_unflatten"])
 
-    def server_round_stacked(self, rnd, upload):
+    def _sharded_server_fns(self, theta_example):
+        """engine="sharded" variants of the flatten/aggregate stages, built
+        once against ``self.mesh``. The relevance stage is shared with the
+        stacked engine (jit re-specializes on the sharded ring). Deltas:
+
+          * the flatten emits the wire form — ``to_bf16`` of the (Cp, P)
+            matrix (``common/precision.py``): that buffer is what crosses
+            the shard boundary into the aggregate, at half the bytes;
+          * the aggregate is one jit-with-NamedSharding program that
+            upcasts to f32 (``to_f32``), runs the fused Eq. 5→6 kernel,
+            and pins B to the client-row sharding from ``sharding.specs``
+            so the per-device footprint stays Cp/d × P. The f32→bf16→f32
+            pair is the sanctioned wire cast the analysis lints accept.
+        """
+        if "sharded_aggregate" not in self._jit_cache:
+            from jax.sharding import NamedSharding
+            from repro.sharding.specs import stacked_aggregate_specs
+            backend = (None if self.server_backend == "loop"
+                       else self.server_backend)
+            sp = stacked_aggregate_specs()
+            wire = self.wire_dtype
+
+            def flatten_wire(th):
+                flat = tree_flatten_stacked(th)[0]
+                return to_bf16(flat) if wire == "bfloat16" else flat
+
+            def aggregate(W, flat):
+                return ops.fused_relevance_aggregate(W, to_f32(flat),
+                                                     backend=backend)
+
+            self._jit_cache["sharded_flatten_wire"] = jax.jit(flatten_wire)
+            self._jit_cache["sharded_aggregate"] = jax.jit(
+                aggregate,
+                out_shardings=(NamedSharding(self.mesh, sp["out"]),
+                               NamedSharding(self.mesh, sp["wn"])))
+        return (self._jit_cache["sharded_flatten_wire"],
+                self._jit_cache["sharded_aggregate"])
+
+    def server_round_stacked(self, rnd, upload, valid=None):
         """Eq. 4/5 → Eq. 6 as a device-resident program over the ring
         buffer. No host round-trips besides the tiny (C, C) relevance
-        readback for ``last_W``."""
+        readback for ``last_W``. ``valid`` is the sharded engine's (Cp,)
+        client-validity mask (None on the single-device stacked engine):
+        it gates the ring push, so mesh-padding rows never acquire history
+        and their relevance rows/columns stay zero."""
         if not self.st_integration:
             return None
         feats = upload["task_feature"]                       # (C, D)
@@ -255,15 +353,25 @@ class FedSTIL(Strategy):
         if self._ring is None:
             self._ring = DeviceRingHistory(C, self.tracker.history_len,
                                            int(feats.shape[-1]))
+            if self.mesh is not None:
+                self._ring.place(self.mesh)
         relevance, flatten, unflatten = self._stacked_server_fns(
             upload["theta"])
         backend = (None if self.server_backend == "loop"
                    else self.server_backend)
+        mask = (jnp.ones((C,), jnp.float32) if valid is None
+                else jnp.asarray(valid, jnp.float32))
         self._ring.buf, self._ring.valid, W_raw = relevance(
-            self._ring.buf, self._ring.valid, jnp.asarray(feats))
-        flat = flatten(upload["theta"])                      # (C, P)
-        B_flat, Wn = ops.fused_relevance_aggregate(W_raw, flat,
-                                                   backend=backend)
+            self._ring.buf, self._ring.valid, jnp.asarray(feats), mask)
+        if self.mesh is not None:
+            flatten_wire, aggregate = self._sharded_server_fns(
+                upload["theta"])
+            flat = flatten_wire(upload["theta"])             # (Cp, P) wire
+            B_flat, Wn = aggregate(W_raw, flat)
+        else:
+            flat = flatten(upload["theta"])                  # (C, P)
+            B_flat, Wn = ops.fused_relevance_aggregate(W_raw, flat,
+                                                       backend=backend)
         self.last_W = np.asarray(Wn)
         # all-zero rows (no relevant neighbours yet) keep their old base
         nz = jnp.sum(Wn, axis=1) > 0

@@ -127,6 +127,19 @@ class DeviceRingHistory:
         self.buf, self.valid = _ring_push(self.buf, self.valid, feats,
                                           jnp.asarray(mask, jnp.float32))
 
+    def place(self, mesh):
+        """Shard the ring's client rows over the mesh's "data" axis (the
+        engine="sharded" layout from ``sharding.specs``): the roll/scatter
+        push and Eq. 4/5 relevance then run as SPMD programs with each
+        device updating only its resident client block. n_clients must
+        already be the mesh-padded Cp."""
+        from repro.sharding import specs as shard_specs
+        sh = jax.sharding.NamedSharding
+        self.buf = jax.device_put(
+            self.buf, sh(mesh, shard_specs.client_row_spec(3)))
+        self.valid = jax.device_put(
+            self.valid, sh(mesh, shard_specs.client_row_spec(2)))
+
     def stacked(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self.buf, self.valid
 

@@ -35,6 +35,7 @@ from repro.comm.batched import BatchedCodec
 from repro.comm.codec import make_codec
 from repro.core import edge_model as EM
 from repro.evalreid.batched import batched_retrieval_metrics
+from repro.sharding import specs as shard_specs
 from repro.train.optimizer import adam, apply_updates, clip_by_global_norm
 
 
@@ -115,6 +116,45 @@ def stacked_eval_program(theta, qp, qids, task_mask, gp, gids, gmask, *,
                                      max_matches=max_matches)
 
 
+# The engine's ONE sharded eval program: the same ``stacked_eval_program``
+# body the single-device engine jits, re-jitted with every leading-C input
+# row-sharded over the mesh's "data" axis (layouts from sharding/specs) and
+# the tiny (C, T) metric outputs replicated for the host readback. Cached
+# per (mesh, config) — both ``Strategy.eval_round_stacked`` under
+# ``engine="sharded"`` and the ``launch/eval_round`` CLI call this, so
+# there is exactly one sharded eval implementation in the repo.
+_SHARDED_EVAL_CACHE: Dict[Any, Callable] = {}
+
+
+def sharded_eval_fn(mesh, *, ranks=(1, 3, 5), kernel_backend=None,
+                    max_matches=None):
+    key = (mesh, tuple(ranks), kernel_backend, max_matches)
+    if key not in _SHARDED_EVAL_CACHE:
+        rep = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(None, None))
+        _SHARDED_EVAL_CACHE[key] = jax.jit(
+            functools.partial(stacked_eval_program, ranks=tuple(ranks),
+                              kernel_backend=kernel_backend,
+                              max_matches=max_matches),
+            out_shardings=rep)
+    return _SHARDED_EVAL_CACHE[key]
+
+
+def pad_client_rows(tree, n_to: int):
+    """Pad every leaf's leading client dim to ``n_to`` by edge-replicating
+    the last row. Replication (not zeros) keeps padded clients numerically
+    boring: their forward/backward passes and eval rows compute real values
+    (no 0/0 BN statistics), and the relevance mask guarantees they never
+    influence a real client."""
+    def pad(l):
+        C = l.shape[0]
+        if C == n_to:
+            return l
+        reps = jnp.broadcast_to(l[-1:], (n_to - C,) + l.shape[1:])
+        return jnp.concatenate([jnp.asarray(l), reps], axis=0)
+    return jax.tree.map(pad, tree)
+
+
 class Strategy:
     """Base: plain local training (STL)."""
 
@@ -146,6 +186,9 @@ class Strategy:
         self.upload_codec = make_codec(codec, **self.codec_opts)
         self.dispatch_codec = make_codec(codec, **self.codec_opts)
         self._wire_programs: Dict[Any, BatchedCodec] = {}
+        # engine="sharded": set by shard_stacked_state (None = stacked/host)
+        self.mesh = None
+        self.padded_clients: Optional[int] = None
 
     # ---- default loss: CE on adaptive layers --------------------------------
     def make_theta(self, trainable, extras):
@@ -333,7 +376,14 @@ class Strategy:
                            *, ranks=(1, 3, 5), kernel_backend=None,
                            max_matches=None):
         """All C x T retrieval evaluations as one jitted device program
-        (feature heads + Pallas distance kernel + mAP/CMC)."""
+        (feature heads + Pallas distance kernel + mAP/CMC). Under
+        ``engine="sharded"`` the same program runs client-row-sharded over
+        the engine mesh via ``sharded_eval_fn``."""
+        if self.mesh is not None:
+            fn = sharded_eval_fn(self.mesh, ranks=tuple(ranks),
+                                 kernel_backend=kernel_backend,
+                                 max_matches=max_matches)
+            return fn(theta, qp, qids, task_mask, gp, gids, gmask)
         key = f"eval:{tuple(ranks)}:{kernel_backend}:{max_matches}"
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(functools.partial(
@@ -428,7 +478,12 @@ class Strategy:
 
     def _stacked_loss_extras(self, stacked: StackedClientState):
         ex = {k: v for k, v in stacked.extras.items() if k.startswith("reg_")}
-        return ex if ex else {"reg_dummy": jnp.zeros((stacked.n_clients,))}
+        if ex:
+            return ex
+        # leading dim from the (possibly padded) trainable, not n_clients:
+        # the vmapped train program needs every input row count to agree
+        lead = jax.tree.leaves(stacked.trainable)[0].shape[0]
+        return {"reg_dummy": jnp.zeros((lead,))}
 
     def _stacked_train_fn(self):
         """One jit: vmap over clients of a lax.scan over pre-gathered epoch
@@ -470,12 +525,58 @@ class Strategy:
         stacked.opt_state = opt_state
         return stacked, None
 
-    def server_round_stacked(self, rnd: int, upload):
-        """Device-resident server round over the stacked upload."""
+    def server_round_stacked(self, rnd: int, upload, valid=None):
+        """Device-resident server round over the stacked upload. ``valid``
+        is the sharded engine's (Cp,) client-validity mask (1.0 for real
+        clients, 0.0 for mesh-padding rows); None means every row is real
+        (the single-device stacked engine)."""
         return None
 
     def apply_dispatch_stacked(self, stacked: StackedClientState, dispatch):
         return stacked
+
+    # ---- sharded (mesh-resident) engine API ----------------------------------
+    # engine="sharded" reuses the whole stacked round loop; the only deltas
+    # are (1) the stacked state/batches are padded to Cp (a multiple of the
+    # data-axis size) and placed with client-row NamedShardings so every
+    # stacked jit runs SPMD over the mesh, and (2) the server round gets a
+    # validity mask so padding rows never enter the relevance ring.
+
+    def shard_stacked_state(self, stacked: StackedClientState, mesh):
+        """Pad the stacked state to Cp rows and place it row-sharded on the
+        engine mesh. Returns (stacked, valid) where valid is the (Cp,)
+        client-validity mask. Host lists (rehearsal memories) stay length
+        C — padding rows have no host-side identity."""
+        C = stacked.n_clients
+        Cp = shard_specs.padded_clients(C, mesh)
+        self.mesh = mesh
+        self.padded_clients = Cp
+
+        def place(tree):
+            padded = pad_client_rows(tree, Cp)
+            sh = shard_specs.named_shardings(
+                mesh, shard_specs.stacked_tree_specs(padded))
+            return jax.device_put(padded, sh)
+
+        stacked.trainable = place(stacked.trainable)
+        stacked.opt_state = place(stacked.opt_state)
+        stacked.extras = {k: place(v) for k, v in stacked.extras.items()}
+        valid = jnp.concatenate([jnp.ones((C,), jnp.float32),
+                                 jnp.zeros((Cp - C,), jnp.float32)])
+        valid = jax.device_put(valid, jax.sharding.NamedSharding(
+            mesh, shard_specs.client_row_spec(1)))
+        return stacked, valid
+
+    def place_batches(self, bx, by):
+        """Pad this round's (C, epochs, B, ...) minibatch stacks to Cp rows
+        and place them row-sharded (no-op outside the sharded engine)."""
+        if self.mesh is None:
+            return bx, by
+        sh = shard_specs.named_shardings(
+            self.mesh, shard_specs.stacked_tree_specs((bx, by)))
+        return jax.device_put(
+            (pad_client_rows(bx, self.padded_clients),
+             pad_client_rows(by, self.padded_clients)), sh)
 
     def stacked_upload_bytes(self, upload, n_clients: int) -> int:
         """Per-client C2S bytes (stacked leaves carry C copies)."""

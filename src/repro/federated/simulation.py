@@ -33,6 +33,15 @@ Two interchangeable engines drive the rounds:
     (C, k, D) relevance ring buffer. Metrics match the host engine to
     float tolerance; per-round wall time scales to C ≫ 100
     (``benchmarks/run.py --bench server`` tracks the ratio).
+  * ``engine="sharded"`` — the stacked round, client-sharded over a
+    ``Mesh(("data", "model"))`` of every host device: state, batches, the
+    relevance ring and all eval inputs are placed row-sharded over "data"
+    (``sharding/specs.py`` is the layout source of truth; C is padded to a
+    multiple of the device count, padding rows masked out of the relevance
+    ring) and the same jitted programs re-specialize into SPMD. Wire-bound
+    buffers cross shards in bf16 (``common/precision.py``); optimizer/BN
+    state stays f32. Metrics and measured comm bytes match the stacked
+    engine (``benchmarks/run.py --bench mesh`` scales C → 10k).
 
 Strategies that need raw images (iCaRL) or non-batchable local steps
 (EWC/MAS consolidation, FedWeIT sparse uploads) simply keep the default
@@ -148,6 +157,8 @@ class _EvalCache:
         self._host_gal: Dict[Tuple[int, int], Tuple] = {}
         self._dev_t: Optional[int] = None
         self._dev_gal = None
+        self._mesh = None
+        self._padded: Optional[int] = None
         if self.device_ready:
             self.qp = jnp.asarray(np.stack(
                 [np.stack([protos[(c, t)][2] for t in range(T)])
@@ -167,6 +178,30 @@ class _EvalCache:
                     np.concatenate([protos[k][3] for k in
                                     bench.gallery_members(c, T - 1)])[None])
                 for c in range(C))
+
+    def place(self, mesh, padded: int):
+        """engine="sharded": pad every stacked eval input's client dim to
+        the mesh-padded Cp (edge-replicating the last client row — padding
+        rows are computed but never read back) and pin it to the client-row
+        sharding from ``sharding.specs``, so the one jitted eval program
+        runs SPMD with each device scoring its own client block."""
+        if not self.device_ready:
+            return
+        self._mesh, self._padded = mesh, padded
+        self.qp = self._place_rows(self.qp)
+        self.qids = self._place_rows(self.qids)
+        self._dev_t = None      # rebuild galleries padded + placed
+
+    def _place_rows(self, arr):
+        if self._mesh is None:
+            return arr
+        from repro.sharding import specs as shard_specs
+        pad = self._padded - arr.shape[0]
+        if pad:
+            arr = jnp.concatenate([arr] + [arr[-1:]] * pad)
+        sh = jax.sharding.NamedSharding(
+            self._mesh, shard_specs.client_row_spec(arr.ndim))
+        return jax.device_put(arr, sh)
 
     def host_gallery(self, c: int, t: int):
         """(gallery prototypes, gallery ids) for client c at task t —
@@ -199,15 +234,15 @@ class _EvalCache:
                 gids[c, :len(y)] = y
                 gmask[c, :len(p)] = 1.0
             self._dev_t = t
-            self._dev_gal = (jnp.asarray(gp), jnp.asarray(gids),
-                             jnp.asarray(gmask))
+            self._dev_gal = tuple(
+                self._place_rows(jnp.asarray(a)) for a in (gp, gids, gmask))
         return self._dev_gal
 
     def task_mask(self, t: int):
         C, T = self.bench.n_clients, self.bench.n_tasks
         m = np.zeros((C, T), np.float32)
         m[:, :t + 1] = 1.0
-        return jnp.asarray(m)
+        return self._place_rows(jnp.asarray(m))
 
 
 def _round_summary(tracker, rnd):
@@ -258,11 +293,11 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                    seed: int = 0, verbose: bool = False,
                    engine: str = "host",
                    eval_backend: str = "device") -> SimulationResult:
-    if engine not in ("host", "stacked"):
+    if engine not in ("host", "stacked", "sharded"):
         raise ValueError(f"unknown engine {engine!r}")
     if eval_backend not in ("device", "host"):
         raise ValueError(f"unknown eval_backend {eval_backend!r}")
-    if engine == "stacked" and not strategy.supports_stacked:
+    if engine in ("stacked", "sharded") and not strategy.supports_stacked:
         raise ValueError(
             f"strategy {strategy.name!r} does not implement the stacked "
             f"engine API; use engine='host'")
@@ -286,18 +321,36 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
     # ragged benchmarks cannot be stacked — fall back to the host oracle
     eval_dev = cache.device_ready
 
-    if engine == "stacked":
+    if engine in ("stacked", "sharded"):
         stacked = strategy.stack_states(states)
+        valid_mask = None
+        lead = C      # leading client dim of stacked payloads (Cp on a mesh)
+        if engine == "sharded":
+            # "computation follows data": build the engine mesh, pad + place
+            # the stacked state / eval inputs row-sharded over "data", and
+            # every existing jitted round program re-specializes into SPMD.
+            # Padding clients train on replicated data; their validity-mask
+            # zero keeps them out of the relevance ring (W rows/cols zero,
+            # nz False), and byte accounting / eval read back only [:C].
+            from repro.sharding import specs as shard_specs
+            mesh = shard_specs.engine_mesh()
+            stacked, valid_mask = strategy.shard_stacked_state(stacked, mesh)
+            lead = strategy.padded_clients
+            cache.place(mesh, lead)
         for rnd in range(rounds):
             t = min(rnd // rounds_per_task, T - 1)
             protos_list = [protos[(c, t)][0] for c in range(C)]
             labels_list = [protos[(c, t)][1] for c in range(C)]
             bx, by = strategy.gather_round_batches(stacked, protos_list,
                                                    labels_list)
+            bx, by = strategy.place_batches(bx, by)
             stacked, upload = strategy.local_train_stacked(
                 stacked, bx, by, protos_list, labels_list, rnd)
             if upload is not None:
-                formula = strategy.stacked_upload_bytes(upload, C)
+                # per-client formula from the ACTUAL leading dim (Cp on a
+                # mesh), logged for the C real clients — so measured and
+                # formula bytes are engine-invariant at any device count
+                formula = strategy.stacked_upload_bytes(upload, lead)
                 if strategy.upload_codec is not None:
                     # one batched device encode/decode for all C rows; the
                     # server round consumes the decoded (lossy) upload
@@ -308,11 +361,13 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
 
             if strategy.uses_server and upload is not None:
                 t0 = time.perf_counter()
-                dispatch = strategy.server_round_stacked(rnd, upload)
+                dispatch = strategy.server_round_stacked(rnd, upload,
+                                                         valid=valid_mask)
                 server_s += time.perf_counter() - t0
                 if dispatch is not None:
-                    per_client = strategy.stacked_dispatch_bytes(dispatch, C)
-                    nz = np.asarray(dispatch["nz"]) if "nz" in dispatch \
+                    per_client = strategy.stacked_dispatch_bytes(dispatch,
+                                                                 lead)
+                    nz = np.asarray(dispatch["nz"])[:C] if "nz" in dispatch \
                         else np.ones((C,), bool)
                     if strategy.dispatch_codec is not None:
                         # the stacked wire model is a BROADCAST stream: the

@@ -25,6 +25,9 @@ from repro.federated.base import ClientState, Strategy
 class FedAvg(Strategy):
     name = "fedavg"
     uses_server = True
+    # the uniform mean is trivially batchable: the stacked/sharded engines
+    # run it as one masked-mean device program over the (C|Cp, ...) rows
+    supports_stacked = True
 
     def local_train(self, client, state, protos, labels, rnd, **_):
         state, _ = self._run_epochs(state, protos, labels)
@@ -39,6 +42,50 @@ class FedAvg(Strategy):
         state.theta = dispatch["theta"]
         state.opt_state = None          # fresh optimizer on new global params
         return state
+
+    # ---- stacked / sharded engine -------------------------------------------
+    def local_train_stacked(self, stacked, bx, by, protos_list, labels_list,
+                            rnd):
+        stacked, _ = super().local_train_stacked(stacked, bx, by,
+                                                 protos_list, labels_list,
+                                                 rnd)
+        return stacked, {"theta": stacked.trainable}
+
+    def server_round_stacked(self, rnd, upload, valid=None):
+        """The FedAvg mean as one device program over the stacked rows.
+        ``valid`` masks mesh-padding rows out of both the numerator and
+        the denominator, so the mean is over the C real clients exactly as
+        on the host; every row (padding included) receives the broadcast
+        mean, matching the host's uniform dispatch."""
+        theta = upload["theta"]
+        lead = jax.tree.leaves(theta)[0].shape[0]
+        if "stacked_mean" not in self._jit_cache:
+            @jax.jit
+            def mean_fn(th, mask):
+                denom = jnp.maximum(jnp.sum(mask), 1.0)
+
+                def m(l):
+                    w = jnp.reshape(mask, (-1,) + (1,) * (l.ndim - 1))
+                    mu = jnp.sum(l * w, axis=0) / denom
+                    return jnp.broadcast_to(mu, l.shape)
+                return jax.tree.map(m, th)
+            self._jit_cache["stacked_mean"] = mean_fn
+        mask = (jnp.ones((lead,), jnp.float32) if valid is None
+                else jnp.asarray(valid, jnp.float32))
+        return {"theta": self._jit_cache["stacked_mean"](theta, mask)}
+
+    def apply_dispatch_stacked(self, stacked, dispatch):
+        theta = dispatch["theta"]
+        if self.mesh is not None:
+            # keep the round-carried state client-row-sharded: the broadcast
+            # mean comes back replicated, so re-pin the engine layout
+            from repro.sharding import specs as shard_specs
+            theta = jax.device_put(theta, shard_specs.named_shardings(
+                self.mesh, shard_specs.stacked_tree_specs(theta)))
+        stacked.trainable = theta
+        # fresh optimizer on new global params (host: opt_state = None)
+        stacked.opt_state = jax.vmap(self.opt.init)(stacked.trainable)
+        return stacked
 
 
 class FedProx(FedAvg):
@@ -64,9 +111,22 @@ class FedProx(FedAvg):
         state.extras["reg_global"] = dispatch["theta"]
         return state
 
+    def apply_dispatch_stacked(self, stacked, dispatch):
+        stacked = super().apply_dispatch_stacked(stacked, dispatch)
+        # the proximal anchor follows the new global params (host parity).
+        # A real copy, not an alias: the train program donates the
+        # trainable buffers, and a donated buffer must not live on in the
+        # (undonated) extras
+        stacked.extras["reg_global"] = jax.tree.map(jnp.array,
+                                                    stacked.trainable)
+        return stacked
+
 
 class FedCurv(FedAvg):
     name = "fedcurv"
+    # Fisher estimation per upload is a host-side chunked vmap over raw
+    # prototypes — not expressible as the engines' uniform batched step
+    supports_stacked = False
 
     def __init__(self, cfg, *, lam=0.01, **kw):
         super().__init__(cfg, **kw)

@@ -25,6 +25,8 @@ from repro.kernels.quantize import batched_quantize as _bquant
 from repro.kernels.relevance_aggregate import relevance_aggregate as _agg
 from repro.kernels.relevance_aggregate import \
     fused_relevance_aggregate as _fused_agg
+from repro.kernels.topk_pack import batched_idx_bitpack as _bidxpack
+from repro.kernels.topk_pack import batched_idx_bitunpack as _bidxunpack
 from repro.kernels.topk_pack import batched_topk_pack as _btopk
 from repro.kernels.topk_pack import batched_topk_unpack as _buntopk
 
@@ -197,6 +199,41 @@ def batched_topk_unpack(vals, idx, *, p: int, group: int = 8, kg: int,
         return REF.batched_topk_unpack_ref(vals, idx, p=p, group=group, kg=kg)
     return _buntopk(vals, idx, p=p, group=group, kg=kg,
                     interpret=(b == "interpret"))
+
+
+@register_program(
+    "kernels.batched_idx_bitpack",
+    abstract_args=lambda: ((_S((_AC, _AP // 8 * 2), jnp.int32),),
+                           {"group": 8, "kg": 2, "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_idx_bitpack_ref",
+    budget_bytes=16 << 20)
+@functools.partial(jax.jit, static_argnames=("group", "kg", "backend"))
+def batched_idx_bitpack(idx, *, group: int = 8, kg: int, backend: str = None):
+    """Wire-codec index compression: (C, K) int32 grouped-pack indices ->
+    (C, bits*ceil(K/8)) uint8 bitplanes (bits = ceil(log2(group)), 3 at
+    group=8 — only the local in-group index ships; absolute indices are
+    slot arithmetic on the receiver)."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_idx_bitpack_ref(idx, group=group, kg=kg)
+    return _bidxpack(idx, group=group, kg=kg, interpret=(b == "interpret"))
+
+
+@register_program(
+    "kernels.batched_idx_bitunpack",
+    abstract_args=lambda: ((_S((_AC, 3 * (_AP // 8 * 2 // 8)), jnp.uint8),),
+                           {"k": _AP // 8 * 2, "group": 8, "kg": 2,
+                            "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_idx_bitunpack_ref",
+    budget_bytes=16 << 20)
+@functools.partial(jax.jit, static_argnames=("k", "group", "kg", "backend"))
+def batched_idx_bitunpack(packed, *, k: int, group: int = 8, kg: int,
+                          backend: str = None):
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_idx_bitunpack_ref(packed, k=k, group=group, kg=kg)
+    return _bidxunpack(packed, k=k, group=group, kg=kg,
+                       interpret=(b == "interpret"))
 
 
 @register_program(

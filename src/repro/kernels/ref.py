@@ -159,6 +159,47 @@ def batched_topk_unpack_ref(vals, idx, *, p: int, group: int, kg: int):
     return dense.reshape(C, nb * group)[:, :p]
 
 
+def batched_idx_bitpack_ref(idx, *, group: int, kg: int):
+    """Bit-pack grouped top-k indices: (C, K) int32 absolute indices from
+    ``batched_topk_pack`` -> (C, bits * ceil(K/8)) uint8, where
+    bits = ceil(log2(group)) (3 at group=8 — a 10.7x shrink vs int32).
+
+    Each slot s of the K = nb*kg pack slots belongs to group s // kg, so
+    only the LOCAL index li = idx - (s // kg) * group (0..group-1) carries
+    information; the absolute index is reconstructed from the slot
+    position. Layout is bitplane-major: plane j holds bit j of every
+    slot's li, 8 slots per byte (slot s -> byte s // 8, bit s % 8), planes
+    concatenated along the last axis — byte lanes, plain shift/mask ALU
+    ops, no gather/scatter. Padding slots (K up to a byte multiple)
+    carry li = 0 and are sliced off by the unpack."""
+    C, K = idx.shape
+    bits = (group - 1).bit_length()
+    kb = (K + 7) // 8
+    slot = jnp.arange(K, dtype=jnp.int32)
+    li = idx.astype(jnp.int32) - (slot // kg)[None, :] * group
+    lip = jnp.pad(li, ((0, 0), (0, kb * 8 - K)))
+    lib = lip.reshape(C, kb, 8)
+    lane = jnp.left_shift(jnp.int32(1), jnp.arange(8, dtype=jnp.int32))
+    planes = [jnp.sum(((lib >> j) & 1) * lane, axis=2) for j in range(bits)]
+    return jnp.concatenate(planes, axis=1).astype(jnp.uint8)
+
+
+def batched_idx_bitunpack_ref(packed, *, k: int, group: int, kg: int):
+    """Inverse of ``batched_idx_bitpack_ref``: (C, bits * ceil(k/8)) uint8
+    bitplanes -> (C, k) int32 absolute indices (slot s's group base
+    (s // kg) * group plus the unpacked local index)."""
+    C = packed.shape[0]
+    bits = (group - 1).bit_length()
+    kb = packed.shape[1] // bits
+    b = packed.reshape(C, bits, kb).astype(jnp.int32)
+    lanes = ((b[..., None] >> jnp.arange(8, dtype=jnp.int32)) & 1)
+    planes = lanes.reshape(C, bits, kb * 8)[:, :, :k]
+    shift = jnp.arange(bits, dtype=jnp.int32)[None, :, None]
+    li = jnp.sum(jnp.left_shift(planes, shift), axis=1)
+    slot = jnp.arange(k, dtype=jnp.int32)
+    return (slot // kg)[None, :] * group + li
+
+
 def kl_similarity_ref(a, b):
     """exp(-KL(softmax(a_i) || softmax(b_j))): (N,D) x (M,D) -> (N,M)."""
     p = jax.nn.softmax(a.astype(jnp.float32), -1)

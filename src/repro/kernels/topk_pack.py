@@ -93,6 +93,82 @@ def batched_topk_pack(x, *, group: int = GROUP, kg: int,
     return vals[:, :K], idx[:, :K]
 
 
+def _bitpack_kernel(i_ref, o_ref, *, group: int, kg: int, k: int,
+                    bits: int):
+    ix = i_ref[...]                                        # (1, kp) int32
+    kp = ix.shape[1]
+    kb = kp // 8
+    s = jax.lax.broadcasted_iota(jnp.int32, (1, kp), 1)
+    # local in-group index per pack slot; padding slots (s >= k) pack as 0
+    li = jnp.where(s < k, ix - (s // kg) * group, 0)
+    lib = li.reshape(kb, 8)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (kb, 8), 1)
+    weight = jnp.left_shift(jnp.ones((kb, 8), jnp.int32), lane)
+    planes = [jnp.sum(((lib >> j) & 1) * weight, axis=1)   # (kb,) per plane
+              for j in range(bits)]
+    o_ref[...] = jnp.concatenate(planes).reshape(1, bits * kb) \
+                    .astype(jnp.uint8)
+
+
+def batched_idx_bitpack(x, *, group: int = GROUP, kg: int,
+                        interpret: Optional[bool] = None):
+    """(C, K) int32 grouped-pack indices -> (C, bits*ceil(K/8)) uint8
+    bitplanes, bits = ceil(log2(group)): only the 3-bit (at group=8) local
+    index per slot crosses the wire; the absolute index is slot-position
+    arithmetic. Bitplane-major layout (plane j = bit j of every slot, 8
+    slots per byte) keeps the kernel pure shift/mask/reduce — no gather.
+    Bit-identical to ``ref.batched_idx_bitpack_ref``."""
+    if interpret is None:
+        interpret = default_interpret()
+    C, K = x.shape
+    bits = (group - 1).bit_length()
+    kb = (K + 7) // 8
+    kp = kb * 8
+    xp = jnp.pad(x, ((0, 0), (0, kp - K)))
+    return pl.pallas_call(
+        functools.partial(_bitpack_kernel, group=group, kg=kg, k=K,
+                          bits=bits),
+        grid=(C,),
+        in_specs=[pl.BlockSpec((1, kp), lambda c: (c, 0))],
+        out_specs=pl.BlockSpec((1, bits * kb), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, bits * kb), jnp.uint8),
+        interpret=interpret,
+    )(xp)
+
+
+def _bitunpack_kernel(p_ref, o_ref, *, group: int, kg: int, bits: int):
+    pk = p_ref[...].astype(jnp.int32)                      # (1, bits*kb)
+    kb = pk.shape[1] // bits
+    b = pk.reshape(bits, kb)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bits, kb, 8), 2)
+    flat = ((b[..., None] >> lane) & 1).reshape(bits, kb * 8)
+    li = jnp.zeros((1, kb * 8), jnp.int32)
+    for j in range(bits):
+        li = li + (flat[j].reshape(1, kb * 8) << j)
+    s = jax.lax.broadcasted_iota(jnp.int32, (1, kb * 8), 1)
+    o_ref[...] = (s // kg) * group + li
+
+
+def batched_idx_bitunpack(packed, *, k: int, group: int = GROUP, kg: int,
+                          interpret: Optional[bool] = None):
+    """Inverse of ``batched_idx_bitpack``: uint8 bitplanes -> (C, k) int32
+    absolute indices ((slot // kg) * group + local index)."""
+    if interpret is None:
+        interpret = default_interpret()
+    C = packed.shape[0]
+    bits = (group - 1).bit_length()
+    kb = packed.shape[1] // bits
+    out = pl.pallas_call(
+        functools.partial(_bitunpack_kernel, group=group, kg=kg, bits=bits),
+        grid=(C,),
+        in_specs=[pl.BlockSpec((1, bits * kb), lambda c: (c, 0))],
+        out_specs=pl.BlockSpec((1, kb * 8), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, kb * 8), jnp.int32),
+        interpret=interpret,
+    )(packed)
+    return out[:, :k]
+
+
 def _unpack_kernel(v_ref, i_ref, o_ref, *, group: int, kg: int):
     t = pl.program_id(1)
     v = v_ref[...].astype(jnp.float32)                     # (1, ob)

@@ -3,11 +3,15 @@
 The device-resident eval program (``federated.base.stacked_eval_program``:
 vmapped feature heads → all distance matrices → mAP/CMC on device) is
 embarrassingly parallel over clients: every input carries a leading C dim
-and no stage contracts it. ``sharded_eval_round`` therefore just jits the
-"ref"-backend program (pallas_call-free, so the lowering compiles on any
-mesh backend) with ``sharding.specs.stacked_eval_specs`` shardings — GSPMD
-places one block of clients per device along the client axis and emits no
-cross-client collectives.
+and no stage contracts it. The one sharded implementation is
+``federated.base.sharded_eval_fn`` — the engine path that
+``run_simulation(engine="sharded")`` uses — which jits the "ref"-backend
+program (pallas_call-free, so the lowering compiles on any mesh backend)
+and lets computation follow the data: inputs are placed with
+``sharding.specs.stacked_eval_specs`` client-row shardings, GSPMD puts one
+block of clients per device along the client axis and emits no
+cross-client collectives. This CLI is just a demo/lowering harness around
+that function.
 
 Run a CPU demo:   PYTHONPATH=src python -m repro.launch.eval_round --demo
 """
@@ -17,51 +21,14 @@ if __name__ == "__main__":
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.compat import set_mesh
-from repro.federated.base import stacked_eval_program
-from repro.sharding.specs import stacked_eval_specs, stacked_eval_theta_specs
-
-
-# jitted wrappers cached per (mesh, layout): one compile per simulation,
-# not one per eval round
-_JIT_CACHE = {}
-
-
-def sharded_eval_round(theta, qp, qids, task_mask, gp, gids, gmask, mesh, *,
-                       client_axis: str = "data", ranks=(1, 3, 5)):
-    """One eval round for all C clients, client rows sharded over
-    ``client_axis``. Inputs/outputs as ``stacked_eval_program``; returns
-    the {"mAP": (C, T), ...} metrics dict (sharded over client rows)."""
-    from jax.sharding import NamedSharding
-
-    leaves, treedef = jax.tree.flatten(theta)
-    key = (mesh, client_axis, tuple(ranks), treedef,
-           tuple(l.ndim for l in leaves))
-    if key not in _JIT_CACHE:
-        sp = stacked_eval_specs(client_axis=client_axis)
-        th_sp = stacked_eval_theta_specs(theta, client_axis=client_axis)
-
-        def ns(s):
-            return NamedSharding(mesh, s)
-
-        out_sh = {"mAP": ns(sp["metrics"])}
-        for k in ranks:
-            out_sh[f"R{k}"] = ns(sp["metrics"])
-        _JIT_CACHE[key] = jax.jit(
-            functools.partial(stacked_eval_program, ranks=tuple(ranks),
-                              kernel_backend="ref"),
-            in_shardings=(jax.tree.map(ns, th_sp), ns(sp["qf"]),
-                          ns(sp["qids"]), ns(sp["task_mask"]), ns(sp["gf"]),
-                          ns(sp["gids"]), ns(sp["gmask"])),
-            out_shardings=out_sh)
-    with set_mesh(mesh):
-        return _JIT_CACHE[key](theta, qp, qids, task_mask, gp, gids, gmask)
+from repro.federated.base import sharded_eval_fn, stacked_eval_program
+from repro.sharding.specs import (named_shardings, stacked_eval_specs,
+                                  stacked_eval_theta_specs)
 
 
 def _demo():
@@ -84,8 +51,18 @@ def _demo():
     gids = jnp.asarray(rng.integers(0, 30, (C, G)), jnp.int32)
     gmask = jnp.asarray((rng.random((C, G)) < 0.9).astype(np.float32))
 
-    out = sharded_eval_round(theta, qp, qids, task_mask, gp, gids, gmask,
-                             mesh)
+    # computation follows data: place client rows along the data axis, then
+    # the engine's jitted eval program re-specializes SPMD on the layout
+    sp = stacked_eval_specs()
+    sh = named_shardings(mesh, sp)
+    theta_sh = jax.device_put(
+        theta, named_shardings(mesh, stacked_eval_theta_specs(theta)))
+    qp, qids, task_mask, gp, gids, gmask = (
+        jax.device_put(a, sh[k]) for a, k in
+        ((qp, "qf"), (qids, "qids"), (task_mask, "task_mask"),
+         (gp, "gf"), (gids, "gids"), (gmask, "gmask")))
+    out = sharded_eval_fn(mesh, kernel_backend="ref")(
+        theta_sh, qp, qids, task_mask, gp, gids, gmask)
     ref = stacked_eval_program(theta, qp, qids, task_mask, gp, gids, gmask,
                                kernel_backend="interpret")
     for k in out:

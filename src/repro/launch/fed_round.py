@@ -38,6 +38,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.common.compat import set_mesh, shard_map
 from repro.common.pytree import tree_flatten_concat, tree_unflatten_concat
+from repro.core.fedstil import sharded_fused_aggregate
 from repro.core.relevance import decayed_relevance
 
 
@@ -103,32 +104,6 @@ def fed_round_hierarchical(theta_local, task_feature_local,
     B_mixed = jax.tree.map(lambda a, b: (1.0 - beta) * a + beta * b,
                            B_local, B_global)
     return B_mixed, w_row
-
-
-def sharded_fused_aggregate(w, thetas, mesh, *, client_axis: str = "data",
-                            param_axis: str = "model"):
-    """The stacked server's fused Eq. 5→6 tail (diag mask + row normalize +
-    B = Wn @ Θ) as a mesh-sharded program for C ≫ 100 clients.
-
-    Θ's (C, P) client rows shard over ``client_axis`` and parameter columns
-    over ``param_axis`` (see ``sharding.specs.stacked_aggregate_specs``);
-    GSPMD contracts the client dim with per-device partial matmuls + one
-    reduce. Uses the jnp oracle math so the lowering is pallas_call-free
-    and compiles on any mesh backend. Returns (B (C, P), Wn (C, C)).
-    """
-    from jax.sharding import NamedSharding
-
-    from repro.kernels.ref import fused_relevance_aggregate_ref
-    from repro.sharding.specs import stacked_aggregate_specs
-
-    specs = stacked_aggregate_specs(client_axis=client_axis,
-                                    param_axis=param_axis)
-    sh = {k: NamedSharding(mesh, v) for k, v in specs.items()}
-    fn = jax.jit(fused_relevance_aggregate_ref,
-                 in_shardings=(sh["w"], sh["thetas"]),
-                 out_shardings=(sh["out"], sh["wn"]))
-    with set_mesh(mesh):
-        return fn(w, thetas)
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +201,8 @@ def _lower(arch: str, multi_pod: bool):
 
 def _stacked_demo():
     """8 host devices, C=64 clients sharded 4-way × P sharded 2-way: the
-    mesh-sharded fused aggregate matches the single-device kernel path."""
+    engine's mesh-sharded fused aggregate (``core.fedstil``, the one
+    sharded implementation) matches the single-device kernel path."""
     from repro.kernels import ops
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))

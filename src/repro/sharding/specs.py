@@ -130,6 +130,62 @@ def tree_param_specs(cfg: ModelConfig, tree, **kw):
 
 
 # ---------------------------------------------------------------------------
+# federated engine mesh: the layout source of truth for engine="sharded"
+# ---------------------------------------------------------------------------
+#
+# Axis names are fixed repo-wide: "data" shards the client dim (every
+# stacked (C, ...) leaf puts its leading dim here), "model" shards the
+# flattened parameter dim of the (C, P) server matrices. On the CPU/host
+# meshes we run today model=1 (P stays whole per device); the axis exists
+# so the layout generalizes to real multi-chip meshes without respelling
+# any spec.
+
+ENGINE_AXES = ("data", "model")
+
+
+def engine_mesh(devices=None, *, model: int = 1):
+    """The engine's Mesh(("data", "model")): all devices on the client
+    axis by default. ``run_simulation(engine="sharded")`` builds exactly
+    this; tests/benches pass an explicit device list to shrink it."""
+    if devices is None:
+        devices = jax.devices()
+    n = len(devices)
+    if n % model != 0:
+        raise ValueError(f"{n} devices not divisible by model={model}")
+    import numpy as _np
+    return jax.sharding.Mesh(
+        _np.asarray(devices).reshape(n // model, model), ENGINE_AXES)
+
+
+def padded_clients(C: int, mesh) -> int:
+    """Smallest Cp >= C divisible by the data-axis size. Clients [C, Cp)
+    are padding: zero batches, validity mask 0, never pushed into the
+    relevance ring (so their W rows/cols are zero and the nz machinery
+    keeps their base untouched)."""
+    d = mesh.shape["data"]
+    return ((C + d - 1) // d) * d
+
+
+def client_row_spec(ndim: int, *, client_axis: str = "data") -> P:
+    """Leading-client-dim spec: rows over ``client_axis``, rest whole."""
+    return P(*((client_axis,) + (None,) * (ndim - 1)))
+
+
+def stacked_tree_specs(tree, *, client_axis: str = "data"):
+    """Spec pytree for any stacked (C, ...) state/batch/buffer pytree:
+    every leaf's leading client dim over ``client_axis``."""
+    return jax.tree.map(
+        lambda l: client_row_spec(l.ndim, client_axis=client_axis), tree)
+
+
+def named_shardings(mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh``."""
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
 # federated server: stacked (C, P) aggregate specs
 # ---------------------------------------------------------------------------
 
@@ -143,12 +199,16 @@ def stacked_aggregate_specs(*, client_axis: str = "data",
     columns over ``param_axis``; W (C, C) shards its *columns* over the
     client axis to line up with Θ's contracted dim, so GSPMD lowers the
     matmul to per-device partial products + one reduce over the client
-    axis. The (C, C) normalized-relevance output is tiny and replicated.
+    axis. The (C, P) aggregate output B is *row*-sharded like Θ — a
+    reduce-scatter instead of an all-reduce — so each device ends the
+    round holding exactly its own clients' new bases (Cp/d × P live
+    bytes, never the full C × P). The (C, C) normalized-relevance
+    output is tiny and replicated (the host reads it back for last_W).
     """
     return {
         "w": P(None, client_axis),
         "thetas": P(client_axis, param_axis),
-        "out": P(None, param_axis),
+        "out": P(client_axis, param_axis),
         "wn": P(None, None),
     }
 

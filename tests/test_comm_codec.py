@@ -122,18 +122,22 @@ def test_topk_codec_reconstruction_and_keyframe():
     tree = {"w": rng.standard_normal(4096).astype(np.float32)}
     codec = make_codec("topk+int8")
     p0 = codec.encode(tree, peer=0)
-    assert "indices" not in p0.buffers          # keyframe ships dense
+    assert "idx_bits" not in p0.buffers         # keyframe ships dense
     d0 = codec.decode(p0, peer=0)
     p1 = codec.encode(tree, peer=0)
-    assert "indices" in p1.buffers              # residuals ship sparse
+    assert "idx_bits" in p1.buffers             # residuals ship sparse
     d1 = codec.decode(p1, peer=0)
     e0 = np.abs(d0["w"] - tree["w"]).max()
     e1 = np.abs(d1["w"] - tree["w"]).max()
     assert e1 <= e0 + 1e-7
+    # grouped indices ship bit-packed: 3 bits per kept slot at group=8
+    k = p1.schema["k"]
+    assert p1.buffers["idx_bits"].dtype == np.uint8
+    assert p1.buffers["idx_bits"].nbytes == 3 * ((k + 7) // 8)
     # stateless variant: sparse from the first payload
     stateless = make_codec("topk+int8", delta=False)
     ps = stateless.encode(tree, peer=0)
-    assert "indices" in ps.buffers
+    assert "idx_bits" in ps.buffers
     dec = stateless.decode(ps, peer=0)
     kept = dec["w"] != 0
     assert kept.sum() == ps.schema["k"]

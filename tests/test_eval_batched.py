@@ -190,8 +190,7 @@ def test_simulation_rejects_unknown_eval_backend(bench, cfg):
 
 
 def test_sharded_eval_round_matches_device_program():
-    from repro.federated.base import stacked_eval_program
-    from repro.launch.eval_round import sharded_eval_round
+    from repro.federated.base import sharded_eval_fn, stacked_eval_program
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     cfg = EdgeModelConfig()
@@ -207,7 +206,7 @@ def test_sharded_eval_round_matches_device_program():
     gids = jnp.asarray(rng.integers(0, 10, (C, G)), jnp.int32)
     gmask = jnp.asarray((rng.random((C, G)) < 0.9).astype(np.float32))
 
-    out = sharded_eval_round(theta, qp, qids, tmask, gp, gids, gmask, mesh)
+    out = sharded_eval_fn(mesh)(theta, qp, qids, tmask, gp, gids, gmask)
     ref = stacked_eval_program(theta, qp, qids, tmask, gp, gids, gmask)
     for k in out:
         np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),

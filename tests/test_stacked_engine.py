@@ -132,10 +132,27 @@ def test_stl_stacked_matches_host(bench, cfg):
 
 
 def test_stacked_engine_rejects_host_only_strategy(bench, cfg):
-    from repro.federated import FedAvg
+    # FedCurv's per-upload Fisher estimation keeps it host-only
+    from repro.federated import FedCurv
     with pytest.raises(ValueError, match="stacked"):
-        run_simulation(FedAvg(cfg, epochs=2), bench, rounds=2,
+        run_simulation(FedCurv(cfg, epochs=2), bench, rounds=2,
                        engine="stacked")
+
+
+@pytest.mark.parametrize("make", [
+    lambda cfg: __import__("repro.federated", fromlist=["FedAvg"]
+                           ).FedAvg(cfg, epochs=2),
+    lambda cfg: __import__("repro.federated", fromlist=["FedProx"]
+                           ).FedProx(cfg, epochs=2),
+], ids=["fedavg", "fedprox"])
+def test_mean_strategies_stacked_match_host(bench, cfg, make):
+    host = run_simulation(make(cfg), bench, rounds=3, eval_every=3)
+    stacked = run_simulation(make(cfg), bench, rounds=3, eval_every=3,
+                             engine="stacked")
+    for key in ("mAP", "R1"):
+        assert abs(host.final(key) - stacked.final(key)) < 1e-4, key
+    assert host.comm.total_c2s == stacked.comm.total_c2s
+    assert host.comm.total_s2c == stacked.comm.total_s2c
 
 
 def test_stacked_relevance_matrix_matches_host(bench, cfg):
@@ -210,7 +227,7 @@ def test_fused_aggregate_fully_zero_w():
 
 
 def test_sharded_fused_aggregate_matches_kernel():
-    from repro.launch.fed_round import sharded_fused_aggregate
+    from repro.core.fedstil import sharded_fused_aggregate
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(9)
