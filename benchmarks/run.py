@@ -7,8 +7,11 @@ host-vs-stacked server-round sweep (``BENCH_server_round.json``);
 (``BENCH_eval_round.json``); ``--bench comm`` runs the wire-codec
 host-loop-vs-batched encode/decode sweep (``BENCH_comm_round.json``);
 ``--bench mesh`` runs the stacked-vs-sharded server-round C→10k scaling
-sweep on a forced 8-device host mesh (``BENCH_mesh_round.json``) — the
-machine-readable perf trajectories future PRs regress against.
+sweep on a forced 8-device host mesh (``BENCH_mesh_round.json``);
+``--bench serve`` runs the online-retrieval QPS/p99 sweep over gallery
+sizes, int8 vs fp32 vs a naive per-query loop
+(``BENCH_serve_round.json``) — the machine-readable perf trajectories
+future PRs regress against.
 """
 import argparse
 import sys
@@ -20,7 +23,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="table2|table3|table4|table5|table6|fig6|fig8|kernels")
     ap.add_argument("--bench", default=None,
-                    choices=["server", "eval", "comm", "mesh"],
+                    choices=["server", "eval", "comm", "mesh", "serve"],
                     help="perf-trajectory benches (JSON output)")
     args = ap.parse_args()
 
@@ -43,6 +46,11 @@ def main() -> None:
         # mesh_round sets XLA_FLAGS at import time, before jax loads
         from benchmarks.mesh_round import bench_mesh_round
         bench_mesh_round()
+        if args.only is None:
+            return
+    if args.bench == "serve":
+        from benchmarks.serve_bench import bench_serve
+        bench_serve()
         if args.only is None:
             return
 

@@ -1,0 +1,236 @@
+"""Serving bench: QPS + latency percentiles vs gallery size, int8 vs fp32.
+
+Three paths over the same resident ``GalleryIndex`` (repro.serving):
+
+  * ``int8``  — the fast path: continuous-batched queries against the
+    int8-quantized index via the ``batched_int8_pairwise_dist`` kernel;
+  * ``fp32``  — the exact batched path (only fits the device budget up to
+    a quarter of the int8 gallery);
+  * ``naive`` — one fp32 device dispatch per query (the pre-serving
+    baseline the batched paths must beat ≥2x at the largest gallery).
+
+Capacity is framed against a declared per-client device budget for the
+gallery feature payload (``BUDGET_BYTES`` = 8 MiB): fp32 rows cost
+4*feat_dim bytes -> 32768 rows; int8 rows cost feat_dim bytes -> 131072
+rows (the 4x the quantize kernel buys; total resident bytes including the
+scale/norm/id sidecars are reported too, ~3.5x). The sweep tops out at
+the int8-enabled maximum, where fp32 cannot follow.
+
+Fidelity: on the synthetic ReID bench (the eval stack's ``_EvalCache``
+galleries, C=5, T=2), both paths rank every query over the FULL gallery
+(k=G) and the mAP delta int8-vs-fp32 must stay within ``MAP_TOLERANCE``;
+the fp32 path must match the numpy host oracle's ranking exactly.
+
+``python -m benchmarks.run --bench serve`` writes ``BENCH_serve_round.json``
+(repo root). ``--smoke`` (used by ``scripts/run_tier1.sh --smoke``) runs a
+tiny gallery end-to-end with the same parity asserts, no JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import edge_model as EM
+from repro.serving import (ContinuousBatcher, GalleryIndex, RetrievalEngine,
+                           map_from_ranked_ids, run_closed_loop,
+                           run_open_loop)
+
+DEFAULT_OUT = Path(__file__).resolve().parent.parent / "BENCH_serve_round.json"
+
+BUDGET_BYTES = 8 << 20            # per-client gallery feature payload budget
+MAP_TOLERANCE = 0.01              # declared int8-vs-fp32 mAP tolerance
+_CFG = EM.EdgeModelConfig()
+G_FP32_MAX = BUDGET_BYTES // (4 * _CFG.feat_dim)     # 32768
+G_INT8_MAX = BUDGET_BYTES // _CFG.feat_dim           # 131072
+
+
+def _stack_thetas(C: int, seed: int, cfg=_CFG):
+    keys = jax.random.split(jax.random.PRNGKey(seed), C)
+    thetas = [EM.init_adaptive_layers(k, cfg) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *thetas)
+
+
+def _mk_engine(C: int, G: int, mode: str, *, k: int, seed: int = 0,
+               keep_fp32: bool = None):
+    rng = np.random.default_rng(seed)
+    protos = [rng.standard_normal((G, _CFG.proto_dim)).astype(np.float32)
+              for _ in range(C)]
+    ids = [np.arange(G, dtype=np.int32) for _ in range(C)]
+    index = GalleryIndex(protos, ids,
+                         keep_fp32=(mode == "fp32") if keep_fp32 is None
+                         else keep_fp32)
+    return RetrievalEngine(index, _stack_thetas(C, seed), k=k, mode=mode), rng
+
+
+def _mk_stream(rng, C: int, n: int):
+    return [(int(rng.integers(C)),
+             rng.standard_normal(_CFG.proto_dim).astype(np.float32), -1)
+            for _ in range(n)]
+
+
+def _strip(r):
+    return {k: v for k, v in r.items() if k != "tickets"}
+
+
+def _measure_batched(engine, rng, *, batch: int, n_queries: int):
+    batcher = ContinuousBatcher(engine, batch=batch)
+    C = engine.index.n_clients
+    batcher.submit(0, _mk_stream(rng, C, 1)[0][1])
+    batcher.drain()                                    # compile warmup
+    closed = _strip(run_closed_loop(batcher, _mk_stream(rng, C, n_queries)))
+    rate = 0.6 * closed["qps"]
+    open_ = _strip(run_open_loop(batcher, _mk_stream(rng, C, n_queries // 2),
+                                 rate))
+    return {"closed": closed, "open": open_}
+
+
+def _measure_naive(engine, rng, *, n_queries: int):
+    C = engine.index.n_clients
+    stream = _mk_stream(rng, C, n_queries)
+    engine.query_naive(stream[0][0], stream[0][1])     # compile warmup
+    lat = []
+    t0 = time.perf_counter()
+    for client, proto, _ in stream:
+        t1 = time.perf_counter()
+        engine.query_naive(client, proto)
+        lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    lat = np.array(lat)
+    return {"n": n_queries, "wall_s": wall, "qps": n_queries / wall,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3)}
+
+
+def _fidelity(C=5, n_tasks=2):
+    """mAP over the synthetic ReID bench's eval galleries, full-gallery
+    ranking per path; plus exact fp32-vs-host-oracle rank parity."""
+    from benchmarks.eval_round import _setup
+    _, strat, states, _, protos, cache = _setup(C, n_tasks)
+    theta = strat.stack_eval_thetas(states)
+    t = n_tasks - 1
+    eng8 = RetrievalEngine.from_eval_cache(theta, cache, t, mode="int8",
+                                           keep_fp32=True)
+    engf = RetrievalEngine(eng8.index, theta, mode="fp32")
+    G = eng8.index.capacity
+    maps = {"int8": [], "fp32": []}
+    parity = True
+    for tt in range(t + 1):
+        qp = np.stack([protos[(c, tt)][2] for c in range(C)])   # (C, Q, D)
+        qids = np.stack([protos[(c, tt)][3] for c in range(C)])
+        qmask = np.ones(qp.shape[:2], np.float32)
+        ids8, _ = eng8.query_batch(qp, qmask, k=G)
+        idsf, _ = engf.query_batch(qp, qmask, k=G)
+        idsh, _ = engf.query_host(qp, qmask, k=G)
+        parity = parity and bool(np.array_equal(idsf, idsh))
+        for c in range(C):
+            maps["int8"].append(map_from_ranked_ids(ids8[c], qids[c]))
+            maps["fp32"].append(map_from_ranked_ids(idsf[c], qids[c]))
+    m8 = float(np.mean(maps["int8"]))
+    mf = float(np.mean(maps["fp32"]))
+    return {"bench": f"synthetic C={C} T={n_tasks} (eval-cache galleries)",
+            "gallery_rows": int(G), "map_fp32": mf, "map_int8": m8,
+            "map_delta": abs(mf - m8), "tolerance": MAP_TOLERANCE,
+            "within_tolerance": bool(abs(mf - m8) <= MAP_TOLERANCE),
+            "fp32_rank_parity_vs_host_oracle": parity}
+
+
+def bench_serve(Gs=(4096, 16384, G_FP32_MAX, G_INT8_MAX), *, C=4, batch=64,
+                k=10, n_queries=512, n_naive=48, out=DEFAULT_OUT):
+    cases = []
+    print("G,int8_qps,fp32_qps,naive_qps,int8_p99_ms,speedup_vs_naive")
+    for G in Gs:
+        fits_fp32 = G <= G_FP32_MAX
+        # one index serves every path; fp32 rows kept as the naive/exact
+        # operand (beyond G_FP32_MAX that violates the declared budget —
+        # flagged, kept only so the baseline exists to be beaten)
+        eng8, rng = _mk_engine(C, G, "int8", k=k, keep_fp32=True)
+        int8 = _measure_batched(eng8, rng, batch=batch, n_queries=n_queries)
+        fp32 = None
+        if fits_fp32:
+            engf = RetrievalEngine(eng8.index, eng8.theta, k=k, mode="fp32")
+            fp32 = _measure_batched(engf, rng, batch=batch,
+                                    n_queries=n_queries)
+        else:
+            engf = RetrievalEngine(eng8.index, eng8.theta, k=k, mode="fp32")
+        naive = _measure_naive(engf, rng, n_queries=n_naive)
+        case = {
+            "G": int(G), "fits_fp32_budget": fits_fp32,
+            "resident_bytes_int8": eng8.index.resident_bytes("int8"),
+            "resident_bytes_fp32": eng8.index.resident_bytes("fp32"),
+            "int8": int8, "fp32": fp32, "naive_fp32": naive,
+            "speedup_vs_naive": int8["closed"]["qps"] / naive["qps"],
+        }
+        cases.append(case)
+        fqps = f"{fp32['closed']['qps']:.0f}" if fp32 else "-"
+        print(f"{G},{int8['closed']['qps']:.0f},{fqps},{naive['qps']:.0f},"
+              f"{int8['closed']['p99_ms']:.2f},"
+              f"{case['speedup_vs_naive']:.1f}x", flush=True)
+
+    fid = _fidelity()
+    assert fid["fp32_rank_parity_vs_host_oracle"], \
+        "serving fp32 path diverged from the numpy oracle"
+    assert fid["within_tolerance"], \
+        f"int8 mAP delta {fid['map_delta']:.4f} > {MAP_TOLERANCE}"
+    print(f"fidelity: mAP fp32={fid['map_fp32']:.4f} "
+          f"int8={fid['map_int8']:.4f} delta={fid['map_delta']:.4f} "
+          f"(tol {MAP_TOLERANCE})")
+
+    from benchmarks.common import mesh_metadata
+    from repro.analysis.registry import coverage
+    cov = coverage()
+    payload = {
+        "bench": "serve_round",
+        "env": mesh_metadata(),
+        "config": {"C": C, "batch": batch, "k": k, "n_queries": n_queries,
+                   "n_naive": n_naive, "backend": jax.default_backend(),
+                   "budget_bytes_per_client": BUDGET_BYTES,
+                   "feat_dim": _CFG.feat_dim},
+        "capacity": {"fp32_rows_max": G_FP32_MAX,
+                     "int8_rows_max": G_INT8_MAX,
+                     "row_capacity_ratio": G_INT8_MAX / G_FP32_MAX},
+        "analysis_coverage": {key: cov[key] for key in
+                              ("programs_registered", "programs_traced")},
+        "cases": cases,
+        "fidelity": fid,
+    }
+    Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+    return payload
+
+
+def smoke():
+    """Tiny end-to-end serve (run_tier1.sh --smoke hook): int8 + naive
+    paths, exact fp32-vs-oracle parity, no JSON."""
+    C, G = 3, 512
+    eng8, rng = _mk_engine(C, G, "int8", k=5, keep_fp32=True)
+    int8 = _measure_batched(eng8, rng, batch=16, n_queries=96)
+    engf = RetrievalEngine(eng8.index, eng8.theta, k=5, mode="fp32")
+    naive = _measure_naive(engf, rng, n_queries=24)
+    qp = rng.standard_normal((C, 4, _CFG.proto_dim)).astype(np.float32)
+    qmask = np.ones((C, 4), np.float32)
+    ids_d, _ = engf.query_batch(qp, qmask)
+    ids_h, _ = engf.query_host(qp, qmask)
+    assert np.array_equal(ids_d, ids_h), "fp32 serving != numpy oracle"
+    print(f"serve smoke OK: G={G} int8 QPS={int8['closed']['qps']:.0f} "
+          f"(p99={int8['closed']['p99_ms']:.2f}ms) naive "
+          f"QPS={naive['qps']:.0f}; fp32 ids == host oracle")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny gallery end-to-end (wiring check, no JSON)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        bench_serve()
+
+
+if __name__ == "__main__":
+    main()

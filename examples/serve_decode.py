@@ -15,6 +15,6 @@ for argv in (
     ["--arch", "rwkv6-1.6b", "--batch", "2", "--prompt-len", "8", "--gen", "24"],
     ["--arch", "zamba2-2.7b", "--batch", "2", "--prompt-len", "8", "--gen", "24"],
 ):
-    print("\n$ python -m repro.launch.serve", " ".join(argv), flush=True)
-    subprocess.run([sys.executable, "-m", "repro.launch.serve"] + argv,
+    print("\n$ python -m repro.launch.serve_lm", " ".join(argv), flush=True)
+    subprocess.run([sys.executable, "-m", "repro.launch.serve_lm"] + argv,
                    check=True)

@@ -11,8 +11,10 @@
 #            the wire-codec comm bench at C=5 (1-round encode/decode
 #            host-vs-batched parity assert), a 2-round engine="sharded"
 #            simulation on a forced 8-device host mesh (stacked-parity
-#            assert), and the mesh scaling bench at C=100
-#            (sharded-vs-stacked aggregate parity).
+#            assert), the mesh scaling bench at C=100
+#            (sharded-vs-stacked aggregate parity), and a tiny-gallery
+#            retrieval-serving smoke (int8 + naive paths, exact
+#            fp32-vs-numpy-oracle rank parity).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -93,4 +95,7 @@ EOF
     echo "=== smoke: mesh scaling bench (stacked vs sharded aggregate) ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.mesh_round --smoke
+    echo "=== smoke: retrieval serving (int8 + naive, oracle parity) ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.serve_bench --smoke
 fi

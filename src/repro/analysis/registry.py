@@ -57,6 +57,7 @@ PROGRAM_MODULES = (
     "repro.kernels.ops",
     "repro.evalreid.batched",
     "repro.federated.base",
+    "repro.serving.engine",
     "repro.analysis.manifest",
 )
 

@@ -63,20 +63,48 @@ def init_adaptive_layers(key, cfg: EdgeModelConfig):
     }
 
 
+def adaptive_pre_bn(theta, protos):
+    """The head up to (not including) BN: protos (N, D) -> (N, feat_dim)."""
+    h = jax.nn.relu(protos @ theta["l1"]["w"] + theta["l1"]["b"])
+    return h @ theta["l2"]["w"] + theta["l2"]["b"]
+
+
+def adaptive_bn_stats(f, mask):
+    """BN statistics (mu, sd) of a pre-BN batch over ``mask``-valid rows
+    only (zero-padded rows contribute nothing). f: (N, feat_dim);
+    mask: (N,) 1.0 = valid. Returns (feat_dim,) each."""
+    m = mask.astype(f.dtype)[:, None]
+    n = jnp.maximum(jnp.sum(m), 1.0)
+    mu = jnp.sum(f * m, 0) / n
+    sd = jnp.sqrt(jnp.sum(jnp.square(f - mu[None, :]) * m, 0) / n) + 1e-5
+    return mu, sd
+
+
+def adaptive_bn_apply(theta, f, mu, sd):
+    """BN affine with the given statistics: (N, feat_dim) -> features."""
+    return (f - mu) / sd * theta["bn"]["scale"] + theta["bn"]["bias"]
+
+
 def adaptive_forward_masked(theta, protos, mask):
     """prototypes -> (retrieval features, class logits) over a padded
     batch: the BN-style statistics (paper adds BN after the representation)
     are computed over ``mask``-valid rows only, so zero-padded rows
     contribute nothing. protos: (N, D); mask: (N,) 1.0 = valid."""
-    h = jax.nn.relu(protos @ theta["l1"]["w"] + theta["l1"]["b"])
-    f = h @ theta["l2"]["w"] + theta["l2"]["b"]
-    m = mask.astype(f.dtype)[:, None]
-    n = jnp.maximum(jnp.sum(m), 1.0)
-    mu = jnp.sum(f * m, 0, keepdims=True) / n
-    sd = jnp.sqrt(jnp.sum(jnp.square(f - mu) * m, 0, keepdims=True) / n) + 1e-5
-    fn = (f - mu) / sd * theta["bn"]["scale"] + theta["bn"]["bias"]
+    f = adaptive_pre_bn(theta, protos)
+    mu, sd = adaptive_bn_stats(f, mask)
+    fn = adaptive_bn_apply(theta, f, mu, sd)
     logits = fn @ theta["head"]["w"]
     return fn, logits
+
+
+def adaptive_forward_frozen(theta, protos, mu, sd):
+    """Inference-mode featurization with FROZEN BN statistics: the serving
+    forward. ``mu``/``sd`` come from ``adaptive_bn_stats`` over the client's
+    resident gallery at index-refresh time, so a query's feature does not
+    depend on whichever batch it was coalesced into (batch-composition
+    invariance — the contract the continuous batcher relies on). Returns
+    features only: the classifier head is dead weight at retrieval time."""
+    return adaptive_bn_apply(theta, adaptive_pre_bn(theta, protos), mu, sd)
 
 
 def adaptive_forward(theta, protos):

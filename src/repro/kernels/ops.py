@@ -17,6 +17,7 @@ from repro.analysis.registry import register_program
 from repro.kernels import ref as REF
 from repro.kernels.adaptive_combine import adaptive_combine as _combine
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.int8_dist import batched_int8_pairwise_dist as _bi8dist
 from repro.kernels.kl_similarity import kl_similarity as _kl
 from repro.kernels.pairwise_dist import batched_pairwise_dist as _bpdist
 from repro.kernels.pairwise_dist import pairwise_dist as _pdist
@@ -94,6 +95,24 @@ def batched_pairwise_dist(q, g, *, backend: str = None):
     if b == "ref":
         return REF.batched_pairwise_dist_ref(q, g)
     return _bpdist(q, g, interpret=(b == "interpret"))
+
+
+@register_program(
+    "kernels.batched_int8_pairwise_dist",
+    abstract_args=lambda: ((_f32(8, 32, 64), _S((8, 4096, 64), jnp.int8),
+                            _f32(8, 4096), _f32(8, 4096)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.batched_int8_pairwise_dist_ref",
+    budget_bytes=32 << 20)
+@functools.partial(jax.jit, static_argnames=("backend",))
+def batched_int8_pairwise_dist(q, gq, gscale, gn2, *, backend: str = None):
+    """(C, B, F) fp32 queries x int8 resident gallery ((C, G, F) codes +
+    (C, G) scales + (C, G) dequantized squared norms) -> (C, B, G): the
+    serving-path distance hot spot (see repro.serving)."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_int8_pairwise_dist_ref(q, gq, gscale, gn2)
+    return _bi8dist(q, gq, gscale, gn2, interpret=(b == "interpret"))
 
 
 @register_program(

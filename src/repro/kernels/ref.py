@@ -41,6 +41,17 @@ def batched_pairwise_dist_ref(q, g):
     return qq + gg - 2.0 * jnp.einsum("cqd,cgd->cqg", q, g)
 
 
+def batched_int8_pairwise_dist_ref(q, gq, gscale, gn2):
+    """fp32 queries vs an int8-quantized resident gallery (the serving
+    index layout): (C, B, F) x ((C, G, F) int8, (C, G) per-row scales,
+    (C, G) dequantized squared norms) -> (C, B, G) squared distances to
+    the dequantized rows. One-way int8 -> f32 dequant (no round-trip)."""
+    q = q.astype(jnp.float32)
+    qq = jnp.sum(q * q, -1)[:, :, None]
+    dot = jnp.einsum("cbf,cgf->cbg", q, gq.astype(jnp.float32))
+    return qq + gn2[:, None, :] - 2.0 * (dot * gscale[:, None, :])
+
+
 def adaptive_combine_ref(base, alpha, a):
     """FedSTIL Eq. 2: theta = B ⊙ alpha + A (elementwise, any shape)."""
     return base * alpha + a

@@ -1,9 +1,13 @@
-"""Serving launcher: batched greedy decoding with the KV-cache / SSM-state
-path (the same serve_step the dry-run lowers at 32k/500k scale).
+"""ReID retrieval serving launcher: device-resident int8 gallery index +
+continuous query batching (repro.serving). Builds a synthetic fleet,
+streams queries through the batcher at peak throughput, demonstrates a
+mid-stream federated-round index update, and prints QPS / p50 / p99.
+(The LM-decode launcher this module used to hold is now
+``repro.launch.serve_lm``.)
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
-      --batch 4 --prompt-len 16 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --clients 4 --gallery 8192 \
+      --queries 512 --batch 64 --mode int8
 """
 from __future__ import annotations
 
@@ -11,59 +15,69 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import decode_step, init_cache, init_params
+from repro.core import edge_model as EM
+from repro.serving import ContinuousBatcher, GalleryIndex, RetrievalEngine
+from repro.serving.batcher import run_closed_loop
+
+
+def _stack_thetas(keys, cfg):
+    thetas = [EM.init_adaptive_layers(k, cfg) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *thetas)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--window", type=int, default=0,
-                    help=">0: sliding-window ring cache (long-context mode)")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--gallery", type=int, default=8192)
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--mode", choices=("int8", "fp32"), default="int8")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
+    cfg = EM.EdgeModelConfig()
     rng = np.random.default_rng(args.seed)
-    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    C, G = args.clients, args.gallery
+    protos = [rng.standard_normal((G, cfg.proto_dim), np.float32)
+              for _ in range(C)]
+    ids = [np.arange(G, dtype=np.int32) for _ in range(C)]
+    keys = jax.random.split(jax.random.PRNGKey(args.seed), C)
+    theta = _stack_thetas(keys, cfg)
 
-    total = args.prompt_len + args.gen
-    cache_len = args.window if args.window else total
-    ring = bool(args.window)
-    cache = init_cache(cfg, args.batch, cache_len,
-                       enc_seq_local=cfg.enc_seq or 0, dtype=jnp.float32)
+    t0 = time.perf_counter()
+    index = GalleryIndex(protos, ids, keep_fp32=(args.mode == "fp32"))
+    engine = RetrievalEngine(index, theta, k=args.k, mode=args.mode)
+    print(f"index: C={C} G={G} mode={args.mode} "
+          f"resident={index.resident_bytes(args.mode) / 1e6:.1f} MB "
+          f"built in {time.perf_counter() - t0:.2f}s")
 
-    step = jax.jit(
-        lambda p, c, t, pos: decode_step(cfg, p, c, t, pos,
-                                         window=args.window, ring=ring,
-                                         enc_len=cfg.enc_seq or None),
-        donate_argnums=(1,))
+    stream = [(int(rng.integers(C)),
+               rng.standard_normal(cfg.proto_dim).astype(np.float32), -1)
+              for _ in range(args.queries)]
 
-    prompt = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
-    tok = jnp.asarray(prompt[:, :1], jnp.int32)
-    generated = []
-    t0 = time.time()
-    for pos in range(total - 1):
-        if pos < args.prompt_len - 1:
-            nxt, cache = step(params, cache, jnp.asarray(
-                prompt[:, pos:pos + 1], jnp.int32), jnp.int32(pos))
-        else:
-            nxt, cache = step(params, cache, tok, jnp.int32(pos))
-            generated.append(np.asarray(nxt))
-            tok = nxt
-    wall = time.time() - t0
-    gen = np.concatenate(generated, 1)
-    tps = args.batch * len(generated) / wall
-    print(f"arch={cfg.name} batch={args.batch} generated={gen.shape[1]} tokens"
-          f" window={args.window or 'full'}")
-    print(f"throughput: {tps:.1f} tok/s (CPU, reduced config)")
-    print("sample:", gen[0][:16].tolist())
+    batcher = ContinuousBatcher(engine, batch=args.batch)
+    # warmup launch (compile) before measuring
+    batcher.submit(0, stream[0][1])
+    batcher.drain()
+
+    half = len(stream) // 2
+    r1 = run_closed_loop(batcher, stream[:half])
+    # a federated round lands mid-stream: new heads, same prototypes —
+    # one jitted refresh and the very next batch serves the new index
+    keys2 = jax.random.split(jax.random.PRNGKey(args.seed + 1), C)
+    tr = time.perf_counter()
+    engine.update(_stack_thetas(keys2, cfg))
+    refresh_ms = (time.perf_counter() - tr) * 1e3
+    r2 = run_closed_loop(batcher, stream[half:])
+
+    for tag, r in (("pre-update ", r1), ("post-update", r2)):
+        print(f"{tag}: {r['n']} queries  QPS={r['qps']:.0f}  "
+              f"p50={r['p50_ms']:.2f}ms  p99={r['p99_ms']:.2f}ms")
+    print(f"index update (new adaptive heads, no re-extraction): "
+          f"{refresh_ms:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Online ReID retrieval serving (the QPS half of the north star).
+
+See README.md in this directory for the index layout, the batching
+contract, and the update protocol.
+"""
+from repro.serving.batcher import (ContinuousBatcher, Ticket,
+                                   run_closed_loop, run_open_loop)
+from repro.serving.engine import (RetrievalEngine, map_from_ranked_ids,
+                                  query_host)
+from repro.serving.index import GalleryIndex, index_refresh_program
+
+__all__ = [
+    "ContinuousBatcher", "Ticket", "run_closed_loop", "run_open_loop",
+    "RetrievalEngine", "map_from_ranked_ids", "query_host",
+    "GalleryIndex", "index_refresh_program",
+]

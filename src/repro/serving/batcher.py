@@ -1,0 +1,142 @@
+"""Continuous batching front end for the retrieval engine.
+
+Queries arrive one at a time, tagged with a client; the batcher coalesces
+them into the engine's fixed-shape (C, B, proto_dim) device batches —
+padding + validity masks, the same idiom as the stacked eval program — so
+every launch amortizes dispatch over up to C*B queries. Because the
+featurization uses frozen BN statistics, a query's answer is independent
+of whichever batch it rides in: coalescing is purely a throughput choice,
+never a semantics one (tested in tests/test_serving.py).
+
+Latency accounting: a ``Ticket`` is stamped at submit; ``step()`` stamps
+completion after results are back on host, so ticket latency = queueing
+(waiting for a slot in a batch) + service (launch + readback).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Ticket:
+    client: int
+    qid: int
+    t_submit: float
+    t_done: Optional[float] = None
+    ids: Optional[np.ndarray] = None       # (k,) top-k gallery ids
+    dists: Optional[np.ndarray] = None     # (k,) squared distances
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+class ContinuousBatcher:
+    """Coalesce a per-client query stream into fixed (C, B) batches.
+
+    ``batch`` is the per-client slot budget B per launch; a launch fires
+    whatever is queued (oldest first per client), padding the rest. A
+    client with more than B pending queries drains over several steps.
+    """
+
+    def __init__(self, engine, batch: int = 32):
+        self.engine = engine
+        self.batch = batch
+        C = engine.index.n_clients
+        Dp = engine.index.gp.shape[-1]
+        self._queues = [deque() for _ in range(C)]
+        self._qp = np.zeros((C, batch, Dp), np.float32)
+        self._qmask = np.zeros((C, batch), np.float32)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues)
+
+    def submit(self, client: int, proto: np.ndarray, qid: int = -1,
+               now: Optional[float] = None) -> Ticket:
+        t = Ticket(client=client, qid=qid,
+                   t_submit=time.perf_counter() if now is None else now)
+        self._queues[client].append((t, np.asarray(proto, np.float32)))
+        return t
+
+    def step(self) -> List[Ticket]:
+        """Run one coalesced launch over the oldest pending queries.
+        Returns the tickets completed by this launch (empty when idle)."""
+        self._qp[:] = 0.0
+        self._qmask[:] = 0.0
+        taken: List[List[Ticket]] = []
+        for c, q in enumerate(self._queues):
+            row = []
+            while q and len(row) < self.batch:
+                t, proto = q.popleft()
+                self._qp[c, len(row)] = proto
+                self._qmask[c, len(row)] = 1.0
+                row.append(t)
+            taken.append(row)
+        if not any(taken):
+            return []
+        ids, dists = self.engine.query_batch(self._qp, self._qmask)
+        done = time.perf_counter()
+        out = []
+        for c, row in enumerate(taken):
+            for b, t in enumerate(row):
+                t.t_done = done
+                t.ids = ids[c, b]
+                t.dists = dists[c, b]
+                out.append(t)
+        return out
+
+    def drain(self) -> List[Ticket]:
+        """Step until every pending query is answered."""
+        out = []
+        while self.pending:
+            out.extend(self.step())
+        return out
+
+
+def run_closed_loop(batcher: ContinuousBatcher, stream) -> dict:
+    """Submit every (client, proto, qid) then drain: peak-throughput
+    measurement (QPS) plus service-latency percentiles."""
+    t0 = time.perf_counter()
+    for client, proto, qid in stream:
+        batcher.submit(client, proto, qid)
+    tickets = batcher.drain()
+    wall = time.perf_counter() - t0
+    lat = np.array([t.latency for t in tickets])
+    return {"n": len(tickets), "wall_s": wall,
+            "qps": len(tickets) / wall,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "tickets": tickets}
+
+
+def run_open_loop(batcher: ContinuousBatcher, stream, rate_qps: float) -> dict:
+    """Paced arrivals at ``rate_qps`` (uniform spacing): the latency a
+    client actually sees at that load — queueing + service."""
+    stream = list(stream)
+    gap = 1.0 / rate_qps
+    tickets = []
+    t0 = time.perf_counter()
+    i = 0
+    while len(tickets) < len(stream):
+        now = time.perf_counter()
+        while i < len(stream) and t0 + i * gap <= now:
+            client, proto, qid = stream[i]
+            batcher.submit(client, proto, qid)
+            i += 1
+        if batcher.pending:
+            tickets.extend(batcher.step())
+        elif i < len(stream):
+            time.sleep(max(0.0, t0 + i * gap - time.perf_counter()))
+    wall = time.perf_counter() - t0
+    lat = np.array([t.latency for t in tickets])
+    return {"n": len(tickets), "wall_s": wall, "rate_qps": rate_qps,
+            "qps": len(tickets) / wall,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "tickets": tickets}

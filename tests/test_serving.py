@@ -1,0 +1,227 @@
+"""Serving-path guarantees (repro.serving):
+
+  * kernel parity: the ``batched_int8_pairwise_dist`` dispatcher's Pallas
+    interpret path vs the jnp ref, and ref vs manual dequant + the fp32
+    batched distance oracle;
+  * index-refresh parity: the jitted refresh program vs its numpy host
+    oracle (int8 codes bit-exact on CPU, dequantized rows allclose);
+  * exact rank parity: the fp32 serving program returns the numpy
+    retrieval oracle's ids verbatim (stable-tie order included);
+  * int8 fidelity: mAP delta vs fp32 bounded on the synthetic bench;
+  * batch-composition invariance (the frozen-BN contract the continuous
+    batcher relies on), batcher coalescing, and incremental head updates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edge_model as EM
+from repro.kernels import ops
+from repro.kernels import ref as REF
+from repro.serving import (ContinuousBatcher, GalleryIndex, RetrievalEngine,
+                           map_from_ranked_ids)
+from repro.serving.index import refresh_host
+
+CFG = EM.EdgeModelConfig()
+
+
+def _stack_thetas(C, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), C)
+    thetas = [EM.init_adaptive_layers(k, CFG) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *thetas)
+
+
+def _mk_index(C=3, G=40, seed=0, ragged=True, keep_fp32=True):
+    rng = np.random.default_rng(seed)
+    sizes = [G - 5 * c if ragged else G for c in range(C)]
+    protos = [rng.standard_normal((n, CFG.proto_dim)).astype(np.float32)
+              for n in sizes]
+    ids = [rng.integers(0, 12, n).astype(np.int32) for n in sizes]
+    return GalleryIndex(protos, ids, capacity=G, keep_fp32=keep_fp32), rng
+
+
+@pytest.fixture(scope="module")
+def engines():
+    index, rng = _mk_index()
+    theta = _stack_thetas(index.n_clients)
+    eng8 = RetrievalEngine(index, theta, k=5, mode="int8")
+    engf = RetrievalEngine(index, theta, k=5, mode="fp32")
+    return index, theta, eng8, engf, rng
+
+
+@pytest.mark.parametrize("C,B,G,F", [(3, 4, 40, 64), (2, 16, 300, 64),
+                                     (1, 1, 7, 32)])
+def test_batched_int8_pairwise_dist_parity(C, B, G, F):
+    """Dispatcher ref vs interpret vs dequant+fp32-dist oracle."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    q = jax.random.normal(k1, (C, B, F), jnp.float32)
+    g = jax.random.normal(k2, (C, G, F), jnp.float32)
+    gq, scales = ops.batched_quantize(g.reshape(C, G * F), chunk=F,
+                                      backend="ref")
+    gq = gq.reshape(C, G, F)
+    gdeq = gq.astype(jnp.float32) * scales[..., None]
+    gn2 = jnp.sum(jnp.square(gdeq), -1)
+    d_ref = ops.batched_int8_pairwise_dist(q, gq, scales, gn2, backend="ref")
+    d_int = ops.batched_int8_pairwise_dist(q, gq, scales, gn2,
+                                           backend="interpret")
+    d_ora = REF.batched_pairwise_dist_ref(q, gdeq)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_int),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_ora),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_index_refresh_matches_host_oracle(engines):
+    index, theta, _, _, _ = engines
+    gmask = (index.gids_host >= 0).astype(np.float32)
+    hq, hs, hn2, hmu, hsd, hf = refresh_host(theta, index.gp, gmask)
+    np.testing.assert_array_equal(hq, np.asarray(index.gq))
+    np.testing.assert_allclose(hs, np.asarray(index.gscale), rtol=1e-6)
+    np.testing.assert_allclose(hn2, np.asarray(index.gn2), atol=1e-5)
+    np.testing.assert_allclose(hmu, np.asarray(index.bn_mu), atol=1e-5)
+    np.testing.assert_allclose(hsd, np.asarray(index.bn_sd), atol=1e-5)
+    np.testing.assert_allclose(hf, np.asarray(index.gf), atol=1e-5)
+    # empty slots: zero codes, unit scale, zero norm
+    empty = np.asarray(index.gids) < 0
+    assert np.all(np.asarray(index.gq)[empty] == 0)
+    assert np.all(np.asarray(index.gscale)[empty] == 1.0)
+    assert np.all(np.asarray(index.gn2)[empty] == 0.0)
+
+
+def test_fp32_rank_parity_exact(engines):
+    """The fp32 serving program == numpy retrieval oracle, id for id."""
+    _, _, _, engf, rng = engines
+    C = engf.index.n_clients
+    qp = rng.standard_normal((C, 7, CFG.proto_dim)).astype(np.float32)
+    qmask = np.ones((C, 7), np.float32)
+    qmask[0, 5:] = 0.0                       # padded slots must come back -1
+    ids_d, dist_d = engf.query_batch(qp, qmask)
+    ids_h, dist_h = engf.query_host(qp, qmask)
+    np.testing.assert_array_equal(ids_d, ids_h)
+    np.testing.assert_allclose(dist_d[qmask > 0], dist_h[qmask > 0],
+                               atol=1e-5)
+    assert np.all(ids_d[0, 5:] == -1)
+
+
+def test_int8_close_to_fp32(engines):
+    """Quantization moves distances by O(1/127) — top-1 must agree on
+    well-separated synthetic data, distances allclose at lsb tolerance."""
+    _, _, eng8, engf, rng = engines
+    C = engf.index.n_clients
+    qp = rng.standard_normal((C, 6, CFG.proto_dim)).astype(np.float32)
+    qmask = np.ones((C, 6), np.float32)
+    ids8, d8 = eng8.query_batch(qp, qmask)
+    idsf, df = engf.query_batch(qp, qmask)
+    assert (ids8[..., 0] == idsf[..., 0]).mean() >= 0.9
+    np.testing.assert_allclose(d8, df, atol=0.05)
+
+
+def test_int8_map_delta_bounded():
+    """Tier-1 fidelity bound: full-ranking mAP, int8 vs fp32, on galleries
+    with real id structure (repeated ids -> multiple matches/query)."""
+    index, rng = _mk_index(C=4, G=60, seed=3)
+    theta = _stack_thetas(4, seed=3)
+    eng8 = RetrievalEngine(index, theta, mode="int8")
+    engf = RetrievalEngine(index, theta, mode="fp32")
+    G = index.capacity
+    qp = rng.standard_normal((4, 10, CFG.proto_dim)).astype(np.float32)
+    qmask = np.ones((4, 10), np.float32)
+    qids = rng.integers(0, 12, (4, 10))
+    ids8, _ = eng8.query_batch(qp, qmask, k=G)
+    idsf, _ = engf.query_batch(qp, qmask, k=G)
+    m8 = np.mean([map_from_ranked_ids(ids8[c], qids[c]) for c in range(4)])
+    mf = np.mean([map_from_ranked_ids(idsf[c], qids[c]) for c in range(4)])
+    assert mf > 0.0
+    assert abs(m8 - mf) <= 0.01, f"int8 mAP delta {abs(m8 - mf):.4f}"
+
+
+def test_batch_composition_invariance(engines):
+    """Frozen BN stats: a query's answer is identical no matter which
+    batch it is coalesced into (ids exact; distances to ulp — XLA's GEMM
+    reduction order varies with the batch shape)."""
+    _, _, eng8, _, rng = engines
+    C = eng8.index.n_clients
+    probe = rng.standard_normal(CFG.proto_dim).astype(np.float32)
+    qp1 = np.zeros((C, 1, CFG.proto_dim), np.float32)
+    qp1[1, 0] = probe
+    m1 = np.zeros((C, 1), np.float32)
+    m1[1, 0] = 1.0
+    ids1, d1 = eng8.query_batch(qp1, m1)
+    qp8 = rng.standard_normal((C, 8, CFG.proto_dim)).astype(np.float32)
+    qp8[1, 3] = probe
+    m8 = np.ones((C, 8), np.float32)
+    ids8, d8 = eng8.query_batch(qp8, m8)
+    np.testing.assert_array_equal(ids1[1, 0], ids8[1, 3])
+    np.testing.assert_allclose(d1[1, 0], d8[1, 3], atol=1e-5)
+
+
+def test_update_swaps_head(engines):
+    """engine.update(new theta) == building a fresh engine from scratch
+    (incremental refresh is exact), and actually changes the index."""
+    index, theta, _, _, rng = engines
+    C = index.n_clients
+    eng = RetrievalEngine(_mk_index()[0], theta, k=5, mode="int8")
+    old_gq = np.asarray(eng.index.gq).copy()
+    theta2 = _stack_thetas(C, seed=9)
+    eng.update(theta2)
+    assert not np.array_equal(old_gq, np.asarray(eng.index.gq))
+    fresh = RetrievalEngine(_mk_index()[0], theta2, k=5, mode="int8")
+    np.testing.assert_array_equal(np.asarray(eng.index.gq),
+                                  np.asarray(fresh.index.gq))
+    qp = rng.standard_normal((C, 3, CFG.proto_dim)).astype(np.float32)
+    qmask = np.ones((C, 3), np.float32)
+    np.testing.assert_array_equal(eng.query_batch(qp, qmask)[0],
+                                  fresh.query_batch(qp, qmask)[0])
+
+
+def test_extend_appends_rows():
+    # leave headroom, then extend client 0 with fresh rows under new ids
+    small, rng = _mk_index(C=2, G=20, ragged=False)
+    theta = _stack_thetas(2)
+    small.gids_host[:, 15:] = -1             # simulate 15/20 fill
+    small._fill[:] = 15
+    eng = RetrievalEngine(small, theta, k=3, mode="fp32")
+    new_p = rng.standard_normal((4, CFG.proto_dim)).astype(np.float32)
+    eng.extend(0, new_p, np.full(4, 99, np.int32))
+    assert small.fill[0] == 19
+    # the new rows are retrievable: query WITH one of them
+    qp = np.zeros((2, 1, CFG.proto_dim), np.float32)
+    qp[0, 0] = new_p[2]
+    ids, _ = eng.query_batch(qp, np.ones((2, 1), np.float32))
+    assert 99 in ids[0, 0]
+    with pytest.raises(ValueError):
+        eng.extend(0, rng.standard_normal((5, CFG.proto_dim)), np.arange(5))
+
+
+def test_batcher_coalesces_and_matches_direct(engines):
+    """Tickets drain oldest-first in <= ceil(n/B) steps per client and
+    return exactly what a direct query_batch returns."""
+    _, _, eng8, _, rng = engines
+    C = eng8.index.n_clients
+    b = ContinuousBatcher(eng8, batch=4)
+    protos = rng.standard_normal((9, CFG.proto_dim)).astype(np.float32)
+    tickets = [b.submit(1, protos[i], qid=i) for i in range(9)]
+    assert b.pending == 9
+    first = b.step()
+    assert len(first) == 4 and [t.qid for t in first] == [0, 1, 2, 3]
+    rest = b.drain()
+    assert len(rest) == 5 and b.pending == 0
+    # per-ticket results == the fixed-shape direct call
+    qp = np.zeros((C, 1, CFG.proto_dim), np.float32)
+    for t, p in zip(tickets, protos):
+        qp[1, 0] = p
+        m = np.zeros((C, 1), np.float32)
+        m[1, 0] = 1.0
+        ids, _ = eng8.query_batch(qp, m)
+        np.testing.assert_array_equal(t.ids, ids[1, 0])
+        assert t.t_done >= t.t_submit
+
+
+def test_map_from_ranked_ids_semantics():
+    # matches at ranks 1 and 3: AP = (1/1 + 2/3)/2
+    ids = np.array([[7, 2, 7, 3], [1, 2, 3, 4]])
+    assert map_from_ranked_ids(ids, np.array([7, 9])) == pytest.approx(5 / 6)
+    # masked-out query dropped even if it would match
+    assert map_from_ranked_ids(ids, np.array([7, 1]),
+                               qmask=np.array([1.0, 0.0])) == pytest.approx(5 / 6)
