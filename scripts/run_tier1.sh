@@ -13,8 +13,9 @@
 #            simulation on a forced 8-device host mesh (stacked-parity
 #            assert), the mesh scaling bench at C=100
 #            (sharded-vs-stacked aggregate parity), and a tiny-gallery
-#            retrieval-serving smoke (int8 + naive paths, exact
-#            fp32-vs-numpy-oracle rank parity).
+#            retrieval-serving smoke (int8 + ivf shortlist + naive
+#            paths, exact fp32-vs-numpy-oracle rank parity, full-probe
+#            ivf recall == 1.0).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -95,7 +96,7 @@ EOF
     echo "=== smoke: mesh scaling bench (stacked vs sharded aggregate) ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.mesh_round --smoke
-    echo "=== smoke: retrieval serving (int8 + naive, oracle parity) ==="
+    echo "=== smoke: retrieval serving (int8 + ivf + naive, oracle parity) ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_bench --smoke
 fi

@@ -18,6 +18,8 @@ from repro.kernels import ref as REF
 from repro.kernels.adaptive_combine import adaptive_combine as _combine
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_dist import batched_int8_pairwise_dist as _bi8dist
+from repro.kernels.ivf import batched_cluster_dist as _bcdist
+from repro.kernels.ivf import batched_ivf_shortlist_scores as _bivfshort
 from repro.kernels.kl_similarity import kl_similarity as _kl
 from repro.kernels.pairwise_dist import batched_pairwise_dist as _bpdist
 from repro.kernels.pairwise_dist import pairwise_dist as _pdist
@@ -113,6 +115,52 @@ def batched_int8_pairwise_dist(q, gq, gscale, gn2, *, backend: str = None):
     if b == "ref":
         return REF.batched_int8_pairwise_dist_ref(q, gq, gscale, gn2)
     return _bi8dist(q, gq, gscale, gn2, interpret=(b == "interpret"))
+
+
+@register_program(
+    "kernels.batched_cluster_assign",
+    abstract_args=lambda: ((_f32(8, 32, 64), _f32(8, 64, 64), _f32(8, 64)),
+                           {"nprobe": 8, "backend": "ref"}),
+    oracle="repro.kernels.ref.batched_cluster_assign_ref",
+    budget_bytes=16 << 20)
+@functools.partial(jax.jit, static_argnames=("nprobe", "backend"))
+def batched_cluster_assign(qf, cent, cn2, *, nprobe: int,
+                           backend: str = None):
+    """IVF coarse-quantizer stage: (C, B, F) fp32 queries x ((C, L, F)
+    centroids + (C, L) sq-norms) -> (C, B, nprobe) int32 nearest-bucket
+    ids (query x centroid distances + ``lax.top_k`` nprobe selection)."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_cluster_assign_ref(qf, cent, cn2, nprobe=nprobe)
+    dc = _bcdist(qf, cent, cn2, interpret=(b == "interpret"))
+    return jax.lax.top_k(-dc, nprobe)[1]
+
+
+@register_program(
+    "kernels.batched_ivf_shortlist",
+    abstract_args=lambda: ((_f32(8, 32, 64), _S((8, 32, 8), jnp.int32),
+                            _S((8, 64, 96, 64), jnp.int8),
+                            _f32(8, 64, 3, 96)),
+                           {"backend": "ref"}),
+    oracle="repro.kernels.ref.batched_ivf_shortlist_ref",
+    budget_bytes=32 << 20)
+@functools.partial(jax.jit, static_argnames=("backend",))
+def batched_ivf_shortlist(qf, probe, bq, pack, *, backend: str = None):
+    """IVF shortlist stage: score only the probed buckets of the
+    bucket-major int8 image. (C, B, F) queries + (C, B, P) probe ids x
+    ((C, L, K, F) int8 bucket rows, (C, L, 3, K) packed sidecar) ->
+    ((C, B, P*K) partial squared distances, (C, B, P*K) row ids, -1 on
+    empty slots). Rows scored per query: P*K ~ nprobe * bcap << G."""
+    b = _dispatch(backend)
+    if b == "ref":
+        return REF.batched_ivf_shortlist_ref(qf, probe, bq, pack)
+    C, B, P = probe.shape
+    K = bq.shape[2]
+    d = _bivfshort(qf, probe, bq, pack, interpret=(b == "interpret"))
+    pids = jax.lax.bitcast_convert_type(pack[:, :, 2, :], jnp.int32)
+    ids = jnp.take_along_axis(pids, probe.reshape(C, B * P)[:, :, None],
+                              axis=1).reshape(C, B, P, K)
+    return d.reshape(C, B, P * K), ids.reshape(C, B, P * K)
 
 
 @register_program(

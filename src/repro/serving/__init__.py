@@ -6,11 +6,13 @@ contract, and the update protocol.
 from repro.serving.batcher import (ContinuousBatcher, Ticket,
                                    run_closed_loop, run_open_loop)
 from repro.serving.engine import (RetrievalEngine, map_from_ranked_ids,
-                                  query_host)
-from repro.serving.index import GalleryIndex, index_refresh_program
+                                  query_host, query_ivf_host, recall_at_k)
+from repro.serving.index import (GalleryIndex, index_refresh_ivf_program,
+                                 index_refresh_program)
 
 __all__ = [
     "ContinuousBatcher", "Ticket", "run_closed_loop", "run_open_loop",
     "RetrievalEngine", "map_from_ranked_ids", "query_host",
-    "GalleryIndex", "index_refresh_program",
+    "query_ivf_host", "recall_at_k",
+    "GalleryIndex", "index_refresh_program", "index_refresh_ivf_program",
 ]

@@ -99,6 +99,102 @@ def query_fp32_program(theta, bn_mu, bn_sd, qp, qmask, gf, gids, *,
     return _rank_topk(dist, gids, qmask, k)
 
 
+def _query_ivf_abstract():
+    cfg = EM.EdgeModelConfig()
+    theta = jax.eval_shape(
+        lambda key: EM.init_adaptive_layers(key, cfg), jax.random.PRNGKey(0))
+    C, B, L, K = 8, 32, 64, 96
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((C,) + s.shape, s.dtype), theta)
+    S = jax.ShapeDtypeStruct
+    F = cfg.feat_dim
+    return ((stacked, S((C, F), jnp.float32), S((C, F), jnp.float32),
+             S((C, B, cfg.proto_dim), jnp.float32), S((C, B), jnp.float32),
+             S((C, L, F), jnp.float32), S((C, L), jnp.float32),
+             S((C, L, K, F), jnp.int8), S((C, L, 3, K), jnp.float32)),
+            {"k": _K, "nprobe": 8, "backend": "ref"})
+
+
+@register_program(
+    "serving.query_ivf",
+    abstract_args=_query_ivf_abstract,
+    oracle="repro.serving.engine.query_ivf_host", budget_bytes=64 << 20)
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "backend"))
+def query_ivf_program(theta, bn_mu, bn_sd, qp, qmask, cent, cn2, bq, pack,
+                      *, k: int, nprobe: int, backend: str = None):
+    """The approximate serving path: featurize -> nearest ``nprobe``
+    coarse buckets (``batched_cluster_assign``) -> score only those
+    buckets' int8 rows (``batched_ivf_shortlist``) -> top-k. Scores
+    nprobe*bcap rows per query instead of G (~sqrt(G)-fold less GEMM at
+    nlist ~ sqrt(G)); distances are the same |q|^2 + |g|^2 - 2 q.g as the
+    exact int8 path, so recall@k vs that path is the fidelity metric."""
+    qf = _featurize(theta, bn_mu, bn_sd, qp)
+    probe = ops.batched_cluster_assign(qf, cent, cn2, nprobe=nprobe,
+                                       backend=backend)
+    d, ids = ops.batched_ivf_shortlist(qf, probe, bq, pack, backend=backend)
+    d = d + jnp.sum(jnp.square(qf), -1)[..., None]
+    d = jnp.where(ids >= 0, d, _PAD_DIST)       # empty slots out of the race
+    negd, idx = jax.lax.top_k(-d, k)
+    top = jnp.take_along_axis(ids, idx, axis=2)
+    top = jnp.where(qmask[..., None] > 0, top, -1)
+    return top, -negd
+
+
+def query_ivf_host(theta, bn_mu, bn_sd, qp, qmask, cent, cn2, bq, pack, *,
+                   k: int, nprobe: int, backend: str = None):
+    """Numpy oracle for ``query_ivf_program``: same features, nearest
+    nprobe centroids by stable argsort, dequantized bucket rows scored
+    exactly, empty slots masked, stable top-k."""
+    del backend
+    t = jax.tree_util.tree_map(np.asarray, theta)
+    bn_mu, bn_sd = np.asarray(bn_mu), np.asarray(bn_sd)
+    qp, qmask = np.asarray(qp, np.float32), np.asarray(qmask)
+    cent, cn2 = np.asarray(cent, np.float32), np.asarray(cn2, np.float32)
+    bq, pack = np.asarray(bq), np.asarray(pack, np.float32)
+    C, B, _ = qp.shape
+    K = bq.shape[2]
+    ids = np.full((C, B, k), -1, np.int32)
+    dd = np.full((C, B, k), _PAD_DIST, np.float32)
+    for c in range(C):
+        tc = jax.tree_util.tree_map(lambda a: a[c], t)
+        h = np.maximum(qp[c] @ tc["l1"]["w"] + tc["l1"]["b"], 0.0)
+        f = h @ tc["l2"]["w"] + tc["l2"]["b"]
+        f = (f - bn_mu[c]) / bn_sd[c] * tc["bn"]["scale"] + tc["bn"]["bias"]
+        f = f / np.sqrt(np.maximum(np.sum(np.square(f), -1, keepdims=True),
+                                   1e-12))
+        f = f.astype(np.float32)
+        qq = np.sum(np.square(f), -1)
+        dc = (qq[:, None] + cn2[c][None, :] - 2.0 * f @ cent[c].T)
+        probe = np.argsort(dc, axis=1, kind="stable")[:, :nprobe]
+        bids_c = pack[c, :, 2, :].view(np.int32)
+        for b in range(B):
+            if qmask[c, b] <= 0:
+                continue
+            sl_ids = bids_c[probe[b]].reshape(-1)
+            blk = bq[c][probe[b]].reshape(-1, bq.shape[-1]).astype(np.float32)
+            scale = pack[c, probe[b], 0, :].reshape(-1)
+            n2 = pack[c, probe[b], 1, :].reshape(-1)
+            d = qq[b] + n2 - 2.0 * (blk @ f[b]) * scale
+            d = np.where(sl_ids >= 0, d, _PAD_DIST).astype(np.float32)
+            order = np.argsort(d, kind="stable")[:k]
+            ids[c, b] = sl_ids[order]
+            dd[c, b] = d[order]
+    return ids, dd
+
+
+def recall_at_k(ids_approx: np.ndarray, ids_exact: np.ndarray,
+                qmask: Optional[np.ndarray] = None) -> float:
+    """Fraction of the exact path's top-k ids that the approximate path
+    also returned, averaged over valid query slots — the standard ANN
+    recall@k (both inputs (..., B, k) ranked id matrices, -1 = empty)."""
+    a, e = np.asarray(ids_approx), np.asarray(ids_exact)
+    hit = (e[..., :, None] == a[..., None, :]).any(-1) | (e < 0)
+    per_q = hit.mean(-1)
+    if qmask is not None:
+        per_q = per_q[np.asarray(qmask) > 0]
+    return float(per_q.mean())
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def _naive_query_one(theta_c, mu, sd, proto, gf_c, gids_c, *, k: int):
     """One query, one client, fp32 — the per-query dispatch baseline the
@@ -176,26 +272,40 @@ def map_from_ranked_ids(ranked_ids: np.ndarray, qids: np.ndarray,
 class RetrievalEngine:
     """Online top-k retrieval over a ``GalleryIndex``.
 
-    ``mode="int8"`` queries the quantized resident image (the fast path);
-    ``mode="fp32"`` queries the exact rows (requires ``keep_fp32=True`` on
-    the index). ``update(theta_stacked)`` is the federated integration
-    point: when a round lands a new stacked adaptive head, one jitted
-    refresh rebuilds the index in place — cached prototypes, no
-    re-extraction — and subsequent queries see the new head.
+    ``mode="int8"`` queries the quantized resident image (the exact fast
+    path); ``mode="fp32"`` queries the exact rows (requires
+    ``keep_fp32=True`` on the index); ``mode="ivf"`` queries only the
+    ``nprobe`` nearest coarse buckets (requires ``nlist > 0`` on the
+    index — the int8 path over the same index is its recall oracle).
+    ``update(theta_stacked)`` is the federated integration point: when a
+    round lands a new stacked adaptive head, one jitted refresh rebuilds
+    the index in place — cached prototypes, no re-extraction — and
+    subsequent queries see the new head.
     """
 
     def __init__(self, index: GalleryIndex, theta_stacked, *, k: int = _K,
-                 mode: str = "int8", backend: Optional[str] = None):
-        if mode not in ("int8", "fp32"):
+                 mode: str = "int8", nprobe: int = 8,
+                 backend: Optional[str] = None, refresh: bool = True):
+        if mode not in ("int8", "fp32", "ivf"):
             raise ValueError(f"unknown serving mode {mode!r}")
         if mode == "fp32" and not index.keep_fp32:
             raise ValueError("fp32 mode needs keep_fp32=True on the index")
+        if mode == "ivf" and not index.nlist:
+            raise ValueError("ivf mode needs nlist > 0 on the index")
         self.index = index
         self.k = k
         self.mode = mode
+        self.nprobe = min(int(nprobe), index.nlist) if index.nlist else 0
         self.backend = backend
         self._naive = None
-        self.update(theta_stacked)
+        if refresh:
+            self.update(theta_stacked)
+        else:
+            # share an already-refreshed index (e.g. several engines/modes
+            # over one resident image in the serve bench)
+            if index.gq is None:
+                raise ValueError("refresh=False needs a refreshed index")
+            self.theta = jax.tree_util.tree_map(jnp.asarray, theta_stacked)
 
     @classmethod
     def from_eval_cache(cls, theta_stacked, cache, t: int, *,
@@ -237,6 +347,11 @@ class RetrievalEngine:
             ids, d = query_int8_program(
                 self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,
                 ix.gq, ix.gscale, ix.gn2, ix.gids, k=k, backend=self.backend)
+        elif self.mode == "ivf":
+            ids, d = query_ivf_program(
+                self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,
+                ix.cent, ix.cn2, ix.bq, ix.pack, k=k, nprobe=self.nprobe,
+                backend=self.backend)
         else:
             ids, d = query_fp32_program(
                 self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,

@@ -237,6 +237,41 @@ def stacked_eval_specs(*, client_axis: str = "data"):
     }
 
 
+def serving_index_specs(*, client_axis: str = "data"):
+    """PartitionSpecs for the serving index's device image (repro.serving).
+
+    Same shape contract as the stacked eval: EVERY resident array —
+    query batches, the flat int8 image, and the IVF bucket image
+    (centroids, bucket-major codes, packed sidecar, inverted lists) —
+    leads with the client dim, row-sharded over ``client_axis``. Each
+    device serves its own block of clients' galleries end-to-end
+    (featurize, cluster-assign, shortlist, rank) with no cross-client
+    collectives; bucket/row content dims stay unsharded.
+    """
+    def row(nd):
+        return P(*((client_axis,) + (None,) * (nd - 1)))
+
+    return {
+        # query operands
+        "qp": row(3),          # (C, B, proto_dim)
+        "qmask": row(2),       # (C, B)
+        "bn_mu": row(2),       # (C, F)
+        "bn_sd": row(2),       # (C, F)
+        # flat image (exact int8/fp32 paths)
+        "gq": row(3),          # (C, G, F) int8 codes
+        "gscale": row(2),      # (C, G)
+        "gn2": row(2),         # (C, G)
+        "gids": row(2),        # (C, G)
+        "gf": row(3),          # (C, G, F) optional fp32 rows
+        # IVF image (approximate path)
+        "cent": row(3),        # (C, nlist, F)
+        "cn2": row(2),         # (C, nlist)
+        "bq": row(4),          # (C, nlist, bcap, F) int8 bucket rows
+        "pack": row(4),        # (C, nlist, 3, bcap) packed sidecar
+        "binv": row(3),        # (C, nlist, bcap) inverted lists
+    }
+
+
 def stacked_eval_theta_specs(theta, *, client_axis: str = "data"):
     """PartitionSpec pytree for a stacked (C, ...) eval-theta pytree:
     client rows over ``client_axis``, everything else replicated."""

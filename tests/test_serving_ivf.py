@@ -1,0 +1,363 @@
+"""IVF shortlist serving guarantees (repro.serving phase 2):
+
+  * kernel parity: ``batched_cluster_assign`` and ``batched_ivf_shortlist``
+    dispatchers, Pallas interpret path vs the jnp ref — including empty
+    bucket slots, whole empty buckets, and all-invalid clients;
+  * build correctness: the jitted IVF refresh places every valid row in
+    exactly one bucket slot (so recall@k == 1.0 at nprobe == nlist is
+    structural), matches its numpy host oracle, and an incremental
+    ``update`` rebuilds the image bit-identically to from-scratch;
+  * query fidelity: full-probe ivf == exact int8 path; clustered-data
+    recall at small nprobe; batch-composition invariance in ivf mode;
+  * batcher: deficit-round-robin fairness under a scarce step budget vs
+    fifo starvation, queueing/service latency split, the open-loop
+    pacer's scheduled-arrival stamps, and ``Ticket.latency`` raising a
+    clear error before completion;
+  * sharding: ``serving_index_specs`` covers the resident image with
+    leading-client-dim ("data" axis) specs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import edge_model as EM
+from repro.kernels import ops
+from repro.kernels import ref as REF
+from repro.serving import (ContinuousBatcher, GalleryIndex, RetrievalEngine,
+                           recall_at_k, run_open_loop)
+from repro.serving.index import ivf_refresh_host
+from repro.sharding import specs as SP
+
+CFG = EM.EdgeModelConfig()
+
+
+def _l2n(x):
+    return x / np.sqrt(np.maximum((x * x).sum(-1, keepdims=True), 1e-12))
+
+
+def _stack_thetas(C, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), C)
+    thetas = [EM.init_adaptive_layers(k, CFG) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *thetas)
+
+
+def _clustered_protos(rng, n, *, rank=8, rho=0.25, n_per=8):
+    """Rows clustered around unit id-centers in a low-rank subspace (the
+    structure that makes an IVF shortlist meaningful; see the serve
+    bench). Returns (rows, centers)."""
+    U, _ = np.linalg.qr(rng.standard_normal((CFG.proto_dim, rank)))
+    centers = _l2n(_l2n(rng.standard_normal((n // n_per, rank))
+                        ).astype(np.float32) @ U.T.astype(np.float32))
+    idx = np.repeat(np.arange(n // n_per), n_per)
+    noise = _l2n(rng.standard_normal((n, CFG.proto_dim))).astype(np.float32)
+    return (_l2n(centers[idx] + rho * noise).astype(np.float32),
+            centers.astype(np.float32))
+
+
+def _mk_ivf_index(C=3, G=256, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    protos, centers = [], []
+    for _ in range(C):
+        p, ctr = _clustered_protos(rng, G)
+        protos.append(p)
+        centers.append(ctr)
+    ids = [np.arange(G, dtype=np.int32) for _ in range(C)]
+    kw.setdefault("nlist", 16)
+    kw.setdefault("bcap", 32)
+    kw.setdefault("ivf_iters", 4)
+    return GalleryIndex(protos, ids, **kw), centers, rng
+
+
+@pytest.fixture(scope="module")
+def ivf_engines():
+    index, centers, rng = _mk_ivf_index()
+    theta = _stack_thetas(index.n_clients)
+    eng8 = RetrievalEngine(index, theta, k=10, mode="int8")
+    engv = RetrievalEngine(index, theta, k=10, mode="ivf", nprobe=4,
+                           refresh=False)
+    return index, theta, eng8, engv, centers, rng
+
+
+def _queries(rng, centers, B, rho=0.25):
+    C = len(centers)
+    qp = np.stack([
+        _l2n(c[rng.integers(0, len(c), B)]
+             + rho * _l2n(rng.standard_normal((B, CFG.proto_dim))))
+        for c in centers]).astype(np.float32)
+    return qp, np.ones((C, B), np.float32)
+
+
+@pytest.mark.parametrize("C,B,F,L", [(2, 5, 32, 7), (1, 1, 64, 3)])
+def test_batched_cluster_assign_parity(C, B, F, L):
+    """Dispatcher ref vs Pallas interpret: identical probe ids."""
+    rng = np.random.default_rng(1)
+    qf = jnp.asarray(rng.standard_normal((C, B, F)).astype(np.float32))
+    cent = jnp.asarray(rng.standard_normal((C, L, F)).astype(np.float32))
+    cn2 = jnp.sum(cent * cent, -1)
+    p_ref = ops.batched_cluster_assign(qf, cent, cn2, nprobe=3,
+                                       backend="ref")
+    p_int = ops.batched_cluster_assign(qf, cent, cn2, nprobe=3,
+                                       backend="interpret")
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_int))
+    assert p_ref.shape == (C, B, 3) and p_ref.dtype == jnp.int32
+    # nearest-first vs the ref distance matrix
+    d = np.asarray(REF.batched_cluster_assign_ref(qf, cent, cn2, nprobe=L))
+    np.testing.assert_array_equal(np.asarray(p_ref), d[..., :3])
+
+
+def test_batched_ivf_shortlist_parity_empty_buckets():
+    """Ref vs interpret over an image with empty slots, a whole empty
+    bucket, and an all-empty client — dists allclose, ids exact."""
+    rng = np.random.default_rng(2)
+    C, B, F, L, K, P = 3, 4, 32, 6, 5, 3
+    qf = jnp.asarray(rng.standard_normal((C, B, F)).astype(np.float32))
+    bids = rng.integers(0, 999, (C, L, K)).astype(np.int32)
+    bids[0, 2, 3:] = -1                      # partial bucket
+    bids[1, 4] = -1                          # whole empty bucket
+    bids[2] = -1                             # all-empty client
+    bq = rng.integers(-127, 128, (C, L, K, F)).astype(np.int8)
+    bq = np.where(bids[..., None] >= 0, bq, 0)
+    scale = (0.001 + rng.random((C, L, K))).astype(np.float32)
+    scale = np.where(bids >= 0, scale, 1.0)
+    n2 = np.where(bids >= 0, rng.random((C, L, K)), 0.0).astype(np.float32)
+    pack = jnp.asarray(np.stack([scale, n2, bids.view(np.float32)], axis=2))
+    probe = jnp.asarray(rng.integers(0, L, (C, B, P)).astype(np.int32))
+    d_ref, i_ref = ops.batched_ivf_shortlist(qf, probe, jnp.asarray(bq),
+                                             pack, backend="ref")
+    d_int, i_int = ops.batched_ivf_shortlist(qf, probe, jnp.asarray(bq),
+                                             pack, backend="interpret")
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_int),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_int))
+    # ids come back from the packed bitcast lane, empty slots as -1
+    i_man = np.stack([bids[c][np.asarray(probe)[c]].reshape(B, P * K)
+                      for c in range(C)])
+    np.testing.assert_array_equal(np.asarray(i_ref), i_man)
+
+
+def test_ivf_build_places_every_valid_row(ivf_engines):
+    index, _, _, _, _, _ = ivf_engines
+    binv = np.asarray(index.binv)
+    G = index.capacity
+    for c in range(index.n_clients):
+        placed = binv[c][binv[c] >= 0]
+        assert len(placed) == G
+        assert len(np.unique(placed)) == G
+    # bucket ids in the packed sidecar mirror gids[binv]
+    pack = np.asarray(index.pack)
+    bids = pack[:, :, 2, :].view(np.int32)
+    gids = np.asarray(index.gids)
+    safe = np.maximum(binv, 0)
+    expect = np.where(binv >= 0,
+                      np.take_along_axis(
+                          gids, safe.reshape(index.n_clients, -1),
+                          axis=1).reshape(binv.shape), -1)
+    np.testing.assert_array_equal(bids, expect)
+
+
+def test_ivf_full_probe_matches_exact(ivf_engines):
+    """nprobe == nlist covers every bucket -> the shortlist IS the whole
+    gallery: recall@k == 1.0 and distances match the exact int8 path."""
+    index, theta, eng8, _, centers, rng = ivf_engines
+    engall = RetrievalEngine(index, theta, k=10, mode="ivf",
+                             nprobe=index.nlist, refresh=False)
+    qp, qm = _queries(rng, centers, 8)
+    qm[0, 6:] = 0.0                          # padded slots -> -1
+    i8, d8 = eng8.query_batch(qp, qm)
+    iv, dv = engall.query_batch(qp, qm)
+    assert recall_at_k(iv, i8, qm) == 1.0
+    np.testing.assert_allclose(dv[qm > 0], d8[qm > 0], atol=1e-4)
+    assert np.all(iv[0, 6:] == -1)
+
+
+def test_ivf_recall_clustered(ivf_engines):
+    """At nprobe = nlist/4 on clustered data the shortlist keeps nearly
+    all true neighbors (the bench measures this at G=131k)."""
+    _, _, eng8, engv, centers, rng = ivf_engines
+    qp, qm = _queries(rng, centers, 32)
+    i8, _ = eng8.query_batch(qp, qm)
+    iv, _ = engv.query_batch(qp, qm)
+    assert recall_at_k(iv, i8, qm) >= 0.9
+
+
+def test_ivf_query_matches_host_oracle(ivf_engines):
+    index, theta, _, engv, centers, rng = ivf_engines
+    qp, qm = _queries(rng, centers, 6)
+    from repro.serving import query_ivf_host
+    ids_d, dist_d = engv.query_batch(qp, qm)
+    ids_h, dist_h = query_ivf_host(
+        engv.theta, index.bn_mu, index.bn_sd, qp, qm, index.cent,
+        index.cn2, index.bq, index.pack, k=10, nprobe=engv.nprobe)
+    np.testing.assert_array_equal(ids_d, ids_h)
+    np.testing.assert_allclose(dist_d, dist_h, atol=1e-4)
+
+
+def test_ivf_all_invalid_client():
+    """A client with zero valid rows builds an empty image (all buckets
+    empty) and answers every query with -1, like the exact path."""
+    rng = np.random.default_rng(3)
+    p0, _ = _clustered_protos(rng, 64)
+    index = GalleryIndex([p0, np.zeros((0, CFG.proto_dim), np.float32)],
+                         [np.arange(64, dtype=np.int32),
+                          np.zeros((0,), np.int32)],
+                         nlist=8, bcap=16, ivf_iters=2)
+    theta = _stack_thetas(2, seed=3)
+    eng8 = RetrievalEngine(index, theta, k=5, mode="int8")
+    engv = RetrievalEngine(index, theta, k=5, mode="ivf", nprobe=2,
+                           refresh=False)
+    assert np.all(np.asarray(index.binv)[1] == -1)
+    qp = rng.standard_normal((2, 3, CFG.proto_dim)).astype(np.float32)
+    qm = np.ones((2, 3), np.float32)
+    i8, _ = eng8.query_batch(qp, qm)
+    iv, _ = engv.query_batch(qp, qm)
+    assert np.all(i8[1] == -1) and np.all(iv[1] == -1)
+
+
+def test_ivf_refresh_matches_host_oracle(ivf_engines):
+    """Jitted build vs the numpy replica: flat image bit-exact, centroids
+    allclose (fp reduction order differs), placement invariants on both."""
+    index, theta, _, _, _, _ = ivf_engines
+    gmask = (index.gids_host >= 0).astype(np.float32)
+    out = ivf_refresh_host(theta, index.gp, gmask, index.gids_host,
+                           nlist=index.nlist, bcap=index.bcap,
+                           iters=index.ivf_iters,
+                           train_cap=index.ivf_train_cap,
+                           balance=index.ivf_balance)
+    hq, hs, hn2, hmu, hsd, hf, hcent, hcn2, hbq, hpack, hbinv = out
+    np.testing.assert_array_equal(hq, np.asarray(index.gq))
+    np.testing.assert_allclose(hcent, np.asarray(index.cent),
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_allclose(hcn2, np.asarray(index.cn2), atol=5e-3)
+    G = index.capacity
+    for c in range(index.n_clients):
+        placed = hbinv[c][hbinv[c] >= 0]
+        assert len(placed) == G and len(np.unique(placed)) == G
+
+
+def test_ivf_incremental_refresh_identical(ivf_engines):
+    """update(theta2) == a from-scratch engine, bit for bit, across the
+    whole IVF image (deterministic jitted build)."""
+    index, theta, _, _, _, rng = ivf_engines
+    eng = RetrievalEngine(_mk_ivf_index()[0], theta, k=5, mode="ivf",
+                          nprobe=4)
+    theta2 = _stack_thetas(index.n_clients, seed=7)
+    eng.update(theta2)
+    fresh = RetrievalEngine(_mk_ivf_index()[0], theta2, k=5, mode="ivf",
+                            nprobe=4)
+    for name in ("cent", "cn2", "bq", "pack", "binv"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(eng.index, name)),
+            np.asarray(getattr(fresh.index, name)), err_msg=name)
+    qp = rng.standard_normal((index.n_clients, 3,
+                              CFG.proto_dim)).astype(np.float32)
+    qm = np.ones((index.n_clients, 3), np.float32)
+    np.testing.assert_array_equal(eng.query_batch(qp, qm)[0],
+                                  fresh.query_batch(qp, qm)[0])
+
+
+def test_ivf_batch_composition_invariance(ivf_engines):
+    """Frozen BN + per-query probe selection: an ivf answer is identical
+    no matter which batch the query rides in."""
+    _, _, _, engv, _, rng = ivf_engines
+    C = engv.index.n_clients
+    probe = rng.standard_normal(CFG.proto_dim).astype(np.float32)
+    qp1 = np.zeros((C, 1, CFG.proto_dim), np.float32)
+    qp1[1, 0] = probe
+    m1 = np.zeros((C, 1), np.float32)
+    m1[1, 0] = 1.0
+    ids1, d1 = engv.query_batch(qp1, m1)
+    qp8 = rng.standard_normal((C, 8, CFG.proto_dim)).astype(np.float32)
+    qp8[1, 3] = probe
+    m8 = np.ones((C, 8), np.float32)
+    ids8, d8 = engv.query_batch(qp8, m8)
+    np.testing.assert_array_equal(ids1[1, 0], ids8[1, 3])
+    np.testing.assert_allclose(d1[1, 0], d8[1, 3], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batcher satellites: admission fairness, latency split, pacer
+# ---------------------------------------------------------------------------
+
+
+def _flood(batcher, rng, counts):
+    for c, n in enumerate(counts):
+        for i in range(n):
+            batcher.submit(c, rng.standard_normal(CFG.proto_dim), qid=i)
+
+
+def test_fifo_starves_under_budget(ivf_engines):
+    _, _, eng8, _, _, rng = ivf_engines
+    b = ContinuousBatcher(eng8, batch=4, policy="fifo", step_budget=4)
+    _flood(b, rng, [12, 4, 4])
+    first = b.step()
+    assert {t.client for t in first} == {0}
+
+
+def test_drr_shares_budget(ivf_engines):
+    """Every backlogged client is served every step under drr; with the
+    same budget fifo gives all slots to client 0 (test above)."""
+    _, _, eng8, _, _, rng = ivf_engines
+    b = ContinuousBatcher(eng8, batch=4, policy="drr", step_budget=4)
+    assert b.quantum == 1
+    _flood(b, rng, [12, 4, 4])
+    steps = []
+    while b.pending:
+        steps.append(b.step())
+    served = [{t.client for t in s} for s in steps]
+    # while all three are backlogged, all three are served each step
+    assert served[0] == {0, 1, 2} and served[1] == {0, 1, 2}
+    # short queues finish no later than the hot client
+    last = {c: max(i for i, s in enumerate(steps)
+                   if any(t.client == c for t in s)) for c in range(3)}
+    assert last[1] < last[0] and last[2] < last[0]
+    # every ticket still answered exactly once
+    assert sum(len(s) for s in steps) == 20
+
+
+def test_ticket_latency_split(ivf_engines):
+    _, _, eng8, _, _, rng = ivf_engines
+    b = ContinuousBatcher(eng8, batch=4)
+    t = b.submit(0, rng.standard_normal(CFG.proto_dim))
+    with pytest.raises(RuntimeError, match="not completed"):
+        _ = t.latency
+    with pytest.raises(RuntimeError, match="not been launched"):
+        _ = t.queue_s
+    b.step()
+    assert t.t_submit <= t.t_launch <= t.t_done
+    assert t.latency == pytest.approx(t.queue_s + t.service_s)
+
+
+def test_open_loop_scheduled_arrivals(ivf_engines):
+    """The pacer stamps tickets with their scheduled arrival times (exact
+    uniform spacing) and keeps up with a rate the engine can sustain."""
+    _, _, eng8, _, _, rng = ivf_engines
+    b = ContinuousBatcher(eng8, batch=4)
+    stream = [(i % 3, rng.standard_normal(CFG.proto_dim), i)
+              for i in range(12)]
+    res = run_open_loop(b, stream, rate_qps=100.0)
+    assert res["n"] == 12
+    ts = sorted(t.t_submit for t in res["tickets"])
+    np.testing.assert_allclose(np.diff(ts), 0.01, rtol=1e-6)
+    for key in ("queue_p50_ms", "service_p50_ms", "p99_ms"):
+        assert key in res
+    # scheduled for 12 arrivals at 100 qps = 0.11 s; generous slack for CI
+    assert res["wall_s"] < 2.0
+
+
+def test_serving_index_specs(ivf_engines):
+    """Every resident array is covered with a leading-"data" row spec of
+    the right rank, and the specs place on a mesh."""
+    index, _, _, _, _, _ = ivf_engines
+    specs = SP.serving_index_specs()
+    arrays = {"gq": index.gq, "gscale": index.gscale, "gn2": index.gn2,
+              "gids": index.gids, "gf": index.gf, "bn_mu": index.bn_mu,
+              "bn_sd": index.bn_sd, "cent": index.cent, "cn2": index.cn2,
+              "bq": index.bq, "pack": index.pack, "binv": index.binv}
+    mesh = SP.engine_mesh(jax.devices()[:1])
+    for name, arr in arrays.items():
+        spec = specs[name]
+        assert len(spec) == arr.ndim, name
+        assert spec[0] == "data", name
+        jax.device_put(jnp.asarray(arr),
+                       jax.sharding.NamedSharding(mesh, spec))
