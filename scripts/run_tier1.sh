@@ -15,7 +15,9 @@
 #            (sharded-vs-stacked aggregate parity), and a tiny-gallery
 #            retrieval-serving smoke (int8 + ivf shortlist + naive
 #            paths, exact fp32-vs-numpy-oracle rank parity, full-probe
-#            ivf recall == 1.0).
+#            ivf recall == 1.0), and an observability smoke (2-round
+#            stacked sim traced to JSONL, report CLI parses it, tracing
+#            overhead gate <2%).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -99,4 +101,45 @@ EOF
     echo "=== smoke: retrieval serving (int8 + ivf + naive, oracle parity) ==="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.serve_bench --smoke
+    echo "=== smoke: observability (traced sim -> report CLI, overhead gate) ==="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+import json, subprocess, sys, tempfile
+from pathlib import Path
+
+from repro.core import FedSTIL
+from repro.core.edge_model import EdgeModelConfig
+from repro.data import FederatedReIDBenchmark
+from repro.federated import run_simulation
+from repro.obs.report import summarize
+from repro.obs.trace import RunLog
+
+out = Path(tempfile.mkdtemp()) / "obs_run.jsonl"
+bench = FederatedReIDBenchmark(n_clients=3, n_tasks=2, n_identities=40,
+                               ids_per_task=8, samples_per_id=6, seed=0)
+cfg = EdgeModelConfig(n_classes=bench.n_classes)
+res = run_simulation(FedSTIL(cfg, n_clients=3, epochs=2), bench,
+                     rounds=2, eval_every=2, engine="stacked",
+                     trace=str(out))
+events = RunLog.read(out)
+s = summarize(events)
+assert s["events"]["spans"] > 0, "traced sim recorded no spans"
+assert "round.server" in s["phases"], sorted(s["phases"])
+assert "server.relevance" in s["stages"], sorted(s["stages"])
+assert isinstance(s["clients"].get("staleness"), list), s["clients"]
+# the report CLI must parse the same JSONL end-to-end
+cli = subprocess.run(
+    [sys.executable, "-m", "repro.obs.report", str(out), "--json"],
+    capture_output=True, text=True, check=True)
+parsed = json.loads(cli.stdout)
+assert parsed["events"] == s["events"]
+print(f"obs smoke OK: {s['events']['spans']} spans, "
+      f"{s['events']['metrics']} metrics, report CLI parses")
+
+# off-by-default-cheap: re-measure the tracing tax (small C: quick)
+from benchmarks.server_round import measure_overhead
+overhead, _ = measure_overhead(C=20, iters=4, repeats=2)
+assert overhead["pass"], f"tracing overhead gate FAILED: {overhead}"
+print(f"overhead gate OK: {overhead['overhead_frac']*100:.2f}% "
+      f"< {overhead['gate']*100:.0f}% @C={overhead['C']}")
+EOF
 fi

@@ -257,6 +257,23 @@ def _reach(graph: Dict[str, Set[str]], roots: Iterable[str]) -> Set[str]:
     return seen
 
 
+def _strict_graph(graph: Dict[str, Set[str]],
+                  scopes: Iterable[str]) -> Dict[str, Set[str]]:
+    """The import graph with scope-package ``__init__`` fan-out removed:
+    a scope package's init re-exporting every submodule (the registry
+    pattern in ``repro.configs``) no longer marks them all reachable —
+    a scoped module counts as alive only when some module imports it BY
+    NAME. Reachability for tests keeps the full graph (a parametrized
+    smoke over the registry is a real consumer); registry reachability
+    uses this one, so registry-dead scoped modules surface as
+    ``seed-module`` findings that need an explicit allowlist reason."""
+    strict = {m: set(es) for m, es in graph.items()}
+    for s in scopes:
+        if s in strict:
+            strict[s] = {e for e in strict[s] if not e.startswith(s + ".")}
+    return strict
+
+
 def lint_dead_modules(root: Path, specs: Iterable[ProgramSpec],
                       scopes: Iterable[str] = ("repro.configs",
                                                "repro.models")
@@ -269,7 +286,7 @@ def lint_dead_modules(root: Path, specs: Iterable[ProgramSpec],
         if tree is not None:
             test_roots |= _repro_imports(tree, modules)
     registry_roots = {s.module for s in specs if s.module in modules}
-    from_registry = _reach(graph, registry_roots)
+    from_registry = _reach(_strict_graph(graph, scopes), registry_roots)
     from_tests = _reach(graph, test_roots)
     out: List[Finding] = []
     for mod in sorted(modules):

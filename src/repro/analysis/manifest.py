@@ -63,7 +63,9 @@ def _register_fedstil() -> None:
 
     # the ring push takes the per-client participation mask (all-ones on
     # the stacked engine, the client-validity mask on the sharded engine)
+    # plus the per-client staleness counter it carries round-to-round
     ring_args = (_SDS((_C, _HIST, D), _F32), _SDS((_C, _HIST), _F32),
+                 _SDS((_C,), _F32),
                  _SDS((_C, D), _F32), _SDS((_C,), _F32))
 
     register_runtime(
@@ -71,25 +73,26 @@ def _register_fedstil() -> None:
         abstract_args=lambda: (ring_args, {}),
         module="repro.core.fedstil",
         oracle="repro.core.relevance.RelevanceTracker.relevance",
-        carry=(0, 1), donate=(0, 1), budget_bytes=64 << 20)
+        carry=(0, 1, 2), donate=(0, 1, 2), budget_bytes=64 << 20)
 
-    def server_round(buf, valid, feats, mask, theta_flat):
+    def server_round(buf, valid, stale, feats, mask, theta_flat):
         """The full staged stacked server round (FedSTIL
         ``server_round_stacked`` data path) as one traceable program:
-        ring push + Eq. 4/5 relevance, the fused Eq. 5→6 kernel,
-        unflatten, and the nz row mask."""
-        buf, valid, w_raw = relevance(buf, valid, feats, mask)
+        ring push + Eq. 4/5 relevance (with its rider telemetry mets),
+        the fused Eq. 5→6 kernel, unflatten, and the nz row mask."""
+        buf, valid, stale, w_raw, mets = relevance(buf, valid, stale,
+                                                   feats, mask)
         b_flat, wn = ops.fused_relevance_aggregate(w_raw, theta_flat,
                                                    backend="ref")
         nz = jnp.sum(wn, axis=1) > 0
-        return buf, valid, unflatten(b_flat), nz
+        return buf, valid, stale, unflatten(b_flat), nz, mets
 
     register_runtime(
         "federated.fedstil_server_round", server_round,
         abstract_args=lambda: (ring_args + (_SDS((_C, P), _F32),), {}),
         module="repro.core.fedstil",
         oracle="repro.core.fedstil.FedSTIL.server_round",
-        carry=(0, 1), donate=(0, 1), budget_bytes=128 << 20)
+        carry=(0, 1, 2), donate=(0, 1, 2), budget_bytes=128 << 20)
 
     # engine="sharded" server stages, built against a 1x1 engine mesh (the
     # layouts are shape-preserving, so the trace is device-count
@@ -100,11 +103,12 @@ def _register_fedstil() -> None:
     strat.mesh = jax.make_mesh((1, 1), ("data", "model"))
     flatten_wire, aggregate = strat._sharded_server_fns(theta_example)
 
-    def sharded_server_round(buf, valid, feats, mask, theta):
-        buf, valid, w_raw = relevance(buf, valid, feats, mask)
+    def sharded_server_round(buf, valid, stale, feats, mask, theta):
+        buf, valid, stale, w_raw, mets = relevance(buf, valid, stale,
+                                                   feats, mask)
         b_flat, wn = aggregate(w_raw, flatten_wire(theta))
         nz = jnp.sum(wn, axis=1) > 0
-        return buf, valid, unflatten(b_flat), nz
+        return buf, valid, stale, unflatten(b_flat), nz, mets
 
     register_runtime(
         "federated.sharded_server_round", sharded_server_round,
@@ -112,7 +116,7 @@ def _register_fedstil() -> None:
             ring_args + (_stretch(_sds_like(theta_example)),), {}),
         module="repro.core.fedstil",
         oracle="repro.core.fedstil.FedSTIL.server_round",
-        carry=(0, 1), donate=(0, 1), budget_bytes=128 << 20,
+        carry=(0, 1, 2), donate=(0, 1, 2), budget_bytes=128 << 20,
         sanctioned_casts=WIRE_CASTS)
 
     epochs, batch = strat.epochs, strat.batch
@@ -149,7 +153,7 @@ def _register_comm() -> None:
     P = 4096
     codec = BatchedCodec(make_codec("topk+int8"), P)
     enc_args = (_SDS((_C, P), _F32),)
-    buffers_sds = jax.eval_shape(codec._enc_sparse, *enc_args)
+    buffers_sds = jax.eval_shape(codec._enc_sparse, *enc_args)[0]
 
     register_runtime(
         "comm.batched_encode", codec._enc_sparse,

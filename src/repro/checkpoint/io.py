@@ -55,10 +55,28 @@ def save_checkpoint(path: str, tree, metadata: Optional[dict] = None):
 
 
 def load_checkpoint(path: str) -> Tuple[Any, Optional[dict]]:
+    """Load a checkpoint written by :func:`save_checkpoint`.
+
+    Raises ``FileNotFoundError`` when the file is missing and
+    ``ValueError`` (naming the path) when it exists but is not a
+    readable npz archive or its metadata sidecar is not valid JSON —
+    a truncated write must fail loudly, not as a deep numpy traceback.
+    """
     if not path.endswith(".npz"):
         path = path + ".npz"
-    data = dict(np.load(path))
+    try:
+        with np.load(path) as npz:
+            data = dict(npz)
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise ValueError(
+            f"corrupt or unreadable checkpoint {path!r}: {e}") from e
     meta = None
     if "__meta__" in data:
-        meta = json.loads(bytes(data.pop("__meta__").tobytes()).decode())
+        try:
+            meta = json.loads(bytes(data.pop("__meta__").tobytes()).decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ValueError(
+                f"corrupt checkpoint metadata in {path!r}: {e}") from e
     return _unflatten(data), meta

@@ -48,6 +48,7 @@ class BatchedCodec:
         self.backend = backend
         self._enc_ref = None
         self._dec_ref = None
+        self.last_metrics = None   # most recent encode's device telemetry
 
         chunk, quant, topk = self.chunk, self.quant, self.topk
         group, kg = self.group, self.kg
@@ -65,6 +66,19 @@ class BatchedCodec:
             return buffers
 
         kk = self.k
+        pp = self.p
+
+        # encode telemetry rides the same launch: per-row residual norm
+        # (decoder-reference staleness — grows as the ref drifts), the
+        # fraction of residual energy the wire kept, and the effective
+        # keep-rate. Tiny (C,) outputs of a program that already runs; the
+        # host only reads them back when a tracer is active.
+        def _enc_metrics(x, vals):
+            r2 = jnp.sum(jnp.square(x), axis=1)
+            k2 = jnp.sum(jnp.square(vals), axis=1)
+            return {"residual_norm": jnp.sqrt(r2),
+                    "kept_energy": k2 / jnp.maximum(r2, 1e-12),
+                    "keep_rate": jnp.sum(vals != 0, axis=1) / pp}
 
         @jax.jit
         def _enc_sparse(x):
@@ -72,13 +86,12 @@ class BatchedCodec:
                                               backend=backend)
             packed = ops.batched_idx_bitpack(idx, group=group, kg=kg,
                                              backend=backend)
-            return _quant(vals, {"idx_bits": packed})
+            return _quant(vals, {"idx_bits": packed}), _enc_metrics(x, vals)
 
         @jax.jit
         def _enc_dense(x):
-            return _quant(x.astype(jnp.float32), {})
-
-        pp = self.p
+            x = x.astype(jnp.float32)
+            return _quant(x, {}), _enc_metrics(x, x)
 
         def _dequant(buffers):
             v = buffers["values"]
@@ -112,15 +125,20 @@ class BatchedCodec:
 
     def _encode_residual(self, x):
         """Apply the keyframe rule and encode; advances NO state.
-        Returns (buffers, delta reference or None)."""
+        Returns (buffers, delta reference or None). Stores the encode
+        launch's rider telemetry in ``self.last_metrics`` (per-row
+        residual norm / kept energy / keep-rate, still on device)."""
         if not self.delta:
-            return (self._enc_sparse(x) if self.topk
-                    else self._enc_dense(x)), None
+            buffers, mets = (self._enc_sparse(x) if self.topk
+                             else self._enc_dense(x))
+            self.last_metrics = mets
+            return buffers, None
         keyframe = self._enc_ref is None
         ref = jnp.zeros_like(x) if keyframe else self._enc_ref
         r = x - ref
-        buffers = (self._enc_dense(r) if keyframe or not self.topk
-                   else self._enc_sparse(r))
+        buffers, mets = (self._enc_dense(r) if keyframe or not self.topk
+                         else self._enc_sparse(r))
+        self.last_metrics = mets
         return buffers, ref
 
     def encode(self, mat) -> Dict[str, jax.Array]:

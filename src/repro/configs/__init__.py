@@ -3,11 +3,8 @@ from __future__ import annotations
 
 from repro.configs.base import INPUT_SHAPES, LONG_CONTEXT_WINDOW, ModelConfig, ShapeConfig
 
-from repro.configs.whisper_medium import CONFIG as _whisper
-from repro.configs.internvl2_26b import CONFIG as _internvl
 from repro.configs.qwen1_5_0_5b import CONFIG as _qwen15
 from repro.configs.llama3_405b import CONFIG as _llama3
-from repro.configs.deepseek_7b import CONFIG as _deepseek
 from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3moe
 from repro.configs.qwen3_1_7b import CONFIG as _qwen3
 from repro.configs.zamba2_2_7b import CONFIG as _zamba2
@@ -17,8 +14,7 @@ from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6
 REGISTRY = {
     c.name: c
     for c in (
-        _whisper, _internvl, _qwen15, _llama3, _deepseek,
-        _qwen3moe, _qwen3, _zamba2, _arctic, _rwkv6,
+        _qwen15, _llama3, _qwen3moe, _qwen3, _zamba2, _arctic, _rwkv6,
     )
 }
 

@@ -33,6 +33,7 @@ from repro.core.relevance import (DeviceRingHistory, RelevanceTracker,
 from repro.core.tying import tying_loss
 from repro.federated.base import ClientState, Strategy
 from repro.kernels import ops
+from repro.obs import trace as obs
 
 
 def sharded_fused_aggregate(w, thetas, mesh, *, backend=None):
@@ -276,20 +277,27 @@ class FedSTIL(Strategy):
             ratio = self.tracker.forgetting_ratio
             metric = self.tracker.metric
 
-            # the ring buffer/validity are the round-carried server state:
-            # the caller overwrites both with the returns, so donate them.
+            # the ring buffer/validity/staleness are the round-carried
+            # server state: the caller overwrites all three with the
+            # returns, so donate them.
             # ``mask`` is the per-client push mask — all-ones on the
             # single-device stacked engine, the client-validity mask on the
             # sharded engine (padding rows must never enter the ring: a
             # zero mask keeps their history invalid, so their W rows AND
             # columns stay zero and the nz machinery leaves them alone).
-            @functools.partial(jax.jit, donate_argnums=(0, 1))
-            def relevance(buf, valid, feats, mask):
+            # The telemetry mets are (C,)-sized outputs of this same
+            # launch — the host only reads them back when a tracer is
+            # active (obs.metric is a no-op otherwise).
+            @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+            def relevance(buf, valid, stale, feats, mask):
                 from repro.core.relevance import _ring_push, ring_relevance
-                buf, valid = _ring_push(buf, valid, feats, mask)
+                from repro.obs import metrics as obsm
+                buf, valid, stale = _ring_push(buf, valid, stale, feats,
+                                               mask)
                 W = ring_relevance(buf, valid, forgetting_ratio=ratio,
                                    metric=metric, backend=backend)
-                return buf, valid, W
+                mets = obsm.relevance_metrics(W, valid, stale)
+                return buf, valid, stale, W, mets
 
             _, meta = tree_flatten_stacked(theta_example)   # one eager call
             self._jit_cache["stacked_relevance"] = relevance
@@ -361,21 +369,34 @@ class FedSTIL(Strategy):
                    else self.server_backend)
         mask = (jnp.ones((C,), jnp.float32) if valid is None
                 else jnp.asarray(valid, jnp.float32))
-        self._ring.buf, self._ring.valid, W_raw = relevance(
-            self._ring.buf, self._ring.valid, jnp.asarray(feats), mask)
+        with obs.span("server.relevance", cat="stage", round=rnd) as sp:
+            (self._ring.buf, self._ring.valid, self._ring.stale, W_raw,
+             mets) = relevance(self._ring.buf, self._ring.valid,
+                               self._ring.stale, jnp.asarray(feats), mask)
+            sp.sync(W_raw)
         if self.mesh is not None:
             flatten_wire, aggregate = self._sharded_server_fns(
                 upload["theta"])
-            flat = flatten_wire(upload["theta"])             # (Cp, P) wire
-            B_flat, Wn = aggregate(W_raw, flat)
+            with obs.span("server.flatten", cat="stage", round=rnd) as sp:
+                flat = sp.sync(flatten_wire(upload["theta"]))  # (Cp, P) wire
+            with obs.span("server.aggregate", cat="stage", round=rnd) as sp:
+                B_flat, Wn = sp.sync(aggregate(W_raw, flat))
         else:
-            flat = flatten(upload["theta"])                  # (C, P)
-            B_flat, Wn = ops.fused_relevance_aggregate(W_raw, flat,
-                                                       backend=backend)
+            with obs.span("server.flatten", cat="stage", round=rnd) as sp:
+                flat = sp.sync(flatten(upload["theta"]))       # (C, P)
+            with obs.span("server.aggregate", cat="stage", round=rnd) as sp:
+                B_flat, Wn = sp.sync(ops.fused_relevance_aggregate(
+                    W_raw, flat, backend=backend))
+        # per-client round observables (staleness, ring fill, W row
+        # mass/density) — computed inside the relevance launch above;
+        # this is a no-op readback unless a tracer is active
+        obs.metric("server.relevance", mets, round=rnd)
         self.last_W = np.asarray(Wn)
         # all-zero rows (no relevant neighbours yet) keep their old base
         nz = jnp.sum(Wn, axis=1) > 0
-        return {"B": unflatten(B_flat), "nz": nz}
+        with obs.span("server.unflatten", cat="stage", round=rnd) as sp:
+            B = sp.sync(unflatten(B_flat))
+        return {"B": B, "nz": nz}
 
     def apply_dispatch_stacked(self, stacked, dispatch):
         nz = dispatch["nz"]

@@ -73,15 +73,19 @@ def normalize_rows(W: np.ndarray) -> np.ndarray:
 
 
 @jax.jit
-def _ring_push(buf, valid, feats, mask):
+def _ring_push(buf, valid, stale, feats, mask):
     """Batched roll/scatter ring update: age-major shift (most recent at
-    age 0) for rows selected by ``mask``; unselected rows are untouched."""
+    age 0) for rows selected by ``mask``; unselected rows are untouched.
+    ``stale`` is the per-client rounds-since-last-push counter — pushed
+    rows reset to 0, skipped rows age by 1 (the telemetry signal the
+    async scheduler's staleness decay will consume)."""
     rolled = jnp.roll(buf, 1, axis=1).at[:, 0].set(feats)
     rvalid = jnp.roll(valid, 1, axis=1).at[:, 0].set(1.0)
     keep = mask > 0
     buf = jnp.where(keep[:, None, None], rolled, buf)
     valid = jnp.where(keep[:, None], rvalid, valid)
-    return buf, valid
+    stale = jnp.where(keep, jnp.zeros_like(stale), stale + 1.0)
+    return buf, valid, stale
 
 
 def ring_relevance(buf, valid, *, forgetting_ratio: float, metric: str = "kl",
@@ -117,6 +121,9 @@ class DeviceRingHistory:
         C, k, D = self.n_clients, self.history_len, self.dim
         self.buf = jnp.zeros((C, k, D), jnp.float32)
         self.valid = jnp.zeros((C, k), jnp.float32)
+        # rounds since each client last pushed (telemetry + async-scheduler
+        # staleness signal); rides the same ring-push program
+        self.stale = jnp.zeros((C,), jnp.float32)
 
     def push_all(self, feats, mask=None):
         """feats: (C, D) this round's task features; mask: optional (C,)
@@ -124,8 +131,9 @@ class DeviceRingHistory:
         feats = jnp.asarray(feats, jnp.float32)
         if mask is None:
             mask = jnp.ones((self.n_clients,), jnp.float32)
-        self.buf, self.valid = _ring_push(self.buf, self.valid, feats,
-                                          jnp.asarray(mask, jnp.float32))
+        self.buf, self.valid, self.stale = _ring_push(
+            self.buf, self.valid, self.stale, feats,
+            jnp.asarray(mask, jnp.float32))
 
     def place(self, mesh):
         """Shard the ring's client rows over the mesh's "data" axis (the
@@ -139,6 +147,8 @@ class DeviceRingHistory:
             self.buf, sh(mesh, shard_specs.client_row_spec(3)))
         self.valid = jax.device_put(
             self.valid, sh(mesh, shard_specs.client_row_spec(2)))
+        self.stale = jax.device_put(
+            self.stale, sh(mesh, shard_specs.client_row_spec(1)))
 
     def stacked(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
         return self.buf, self.valid

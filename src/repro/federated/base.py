@@ -35,6 +35,7 @@ from repro.comm.batched import BatchedCodec
 from repro.comm.codec import make_codec
 from repro.core import edge_model as EM
 from repro.evalreid.batched import batched_retrieval_metrics
+from repro.obs import trace as obs
 from repro.sharding import specs as shard_specs
 from repro.train.optimizer import adam, apply_updates, clip_by_global_norm
 
@@ -296,7 +297,9 @@ class Strategy:
         including verbatim control tensors)."""
         from repro.common.pytree import tree_bytes
         lossy, verbatim = split(tree)
-        decoded, payload = codec.roundtrip(lossy, peer=peer)
+        with obs.span("comm.roundtrip", cat="codec", peer=list(peer)) as sp:
+            decoded, payload = codec.roundtrip(lossy, peer=peer)
+            sp.sync(decoded)
         measured = payload.nbytes
         if verbatim is not None:
             measured += tree_bytes(verbatim)
@@ -335,7 +338,13 @@ class Strategy:
         mat, meta = tree_flatten_stacked(lossy)
         C = mat.shape[0]
         prog = self._stacked_wire_program(which, int(mat.shape[1]))
-        recon, buffers = prog.roundtrip(mat)
+        with obs.span(f"comm.{which}", cat="codec") as sp:
+            recon, buffers = prog.roundtrip(mat)
+            sp.sync(recon)
+        # rider telemetry from the encode launch (residual norm = decoder-
+        # reference staleness, kept energy, keep-rate); no-op readback
+        # unless a tracer is active
+        obs.metric("comm.encode", prog.last_metrics, direction=which)
         per_client = prog.per_client_bytes(buffers)
         if verbatim is not None:
             per_client += tree_bytes(verbatim) // max(C, 1)

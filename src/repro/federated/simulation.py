@@ -72,6 +72,7 @@ from repro.core import edge_model as EM
 from repro.data.synthetic import FederatedReIDBenchmark
 from repro.evalreid import evaluate_retrieval
 from repro.federated.base import Strategy
+from repro.obs import trace as obs
 from repro.train.metrics import LifelongTracker
 
 EVAL_RANKS = (1, 3, 5)
@@ -292,7 +293,40 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                    *, rounds: int = 12, eval_every: int = 2,
                    seed: int = 0, verbose: bool = False,
                    engine: str = "host",
-                   eval_backend: str = "device") -> SimulationResult:
+                   eval_backend: str = "device",
+                   trace=None) -> SimulationResult:
+    """Drive ``rounds`` federated rounds of ``strategy`` over ``bench``.
+
+    ``trace`` turns on telemetry for this run: a path writes the JSONL
+    there (summarize with ``python -m repro.obs.report``); an
+    ``obs.Tracer`` records into it without closing (the caller owns the
+    sink). ``None`` (default) keeps every obs hook on the null tracer —
+    no timestamps, no device syncs, no readbacks.
+    """
+    if trace is None:
+        return _run_simulation(strategy, bench, rounds=rounds,
+                               eval_every=eval_every, seed=seed,
+                               verbose=verbose, engine=engine,
+                               eval_backend=eval_backend)
+    owns = not isinstance(trace, obs.Tracer)
+    tracer = obs.Tracer(trace) if owns else trace
+    tracer.meta(kind_detail="run_simulation", engine=engine, rounds=rounds,
+                n_clients=bench.n_clients, strategy=strategy.name)
+    try:
+        with obs.active(tracer):
+            return _run_simulation(strategy, bench, rounds=rounds,
+                                   eval_every=eval_every, seed=seed,
+                                   verbose=verbose, engine=engine,
+                                   eval_backend=eval_backend)
+    finally:
+        if owns:
+            tracer.close()
+
+
+def _run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
+                    *, rounds: int, eval_every: int, seed: int,
+                    verbose: bool, engine: str,
+                    eval_backend: str) -> SimulationResult:
     if engine not in ("host", "stacked", "sharded"):
         raise ValueError(f"unknown engine {engine!r}")
     if eval_backend not in ("device", "host"):
@@ -341,11 +375,14 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
             t = min(rnd // rounds_per_task, T - 1)
             protos_list = [protos[(c, t)][0] for c in range(C)]
             labels_list = [protos[(c, t)][1] for c in range(C)]
-            bx, by = strategy.gather_round_batches(stacked, protos_list,
-                                                   labels_list)
-            bx, by = strategy.place_batches(bx, by)
-            stacked, upload = strategy.local_train_stacked(
-                stacked, bx, by, protos_list, labels_list, rnd)
+            with obs.span("round.gather", cat="phase", round=rnd):
+                bx, by = strategy.gather_round_batches(stacked, protos_list,
+                                                       labels_list)
+                bx, by = strategy.place_batches(bx, by)
+            with obs.span("round.local_train", cat="phase", round=rnd) as sp:
+                stacked, upload = strategy.local_train_stacked(
+                    stacked, bx, by, protos_list, labels_list, rnd)
+                sp.sync(stacked.trainable)
             if upload is not None:
                 # per-client formula from the ACTUAL leading dim (Cp on a
                 # mesh), logged for the C real clients — so measured and
@@ -354,15 +391,20 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                 if strategy.upload_codec is not None:
                     # one batched device encode/decode for all C rows; the
                     # server round consumes the decoded (lossy) upload
-                    upload, measured = strategy.wire_upload_stacked(upload)
+                    with obs.span("round.encode", cat="phase", round=rnd):
+                        upload, measured = strategy.wire_upload_stacked(
+                            upload)
                     comm.log_c2s_many(rnd, formula, C, measured=measured)
                 else:
                     comm.log_c2s_many(rnd, formula, C)
 
             if strategy.uses_server and upload is not None:
                 t0 = time.perf_counter()
-                dispatch = strategy.server_round_stacked(rnd, upload,
-                                                         valid=valid_mask)
+                with obs.span("round.server", cat="phase", round=rnd) as sp:
+                    dispatch = strategy.server_round_stacked(
+                        rnd, upload, valid=valid_mask)
+                    if dispatch is not None:
+                        sp.sync(dispatch)   # dict shape is strategy-specific
                 server_s += time.perf_counter() - t0
                 if dispatch is not None:
                     per_client = strategy.stacked_dispatch_bytes(dispatch,
@@ -378,8 +420,10 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                         # engine instead opens a per-client stream at that
                         # client's first non-empty dispatch; under partial
                         # nz its byte totals are lower by design.
-                        dispatch, measured = strategy.wire_dispatch_stacked(
-                            dispatch)
+                        with obs.span("round.encode", cat="phase",
+                                      round=rnd):
+                            dispatch, measured = \
+                                strategy.wire_dispatch_stacked(dispatch)
                         # formula oracle keeps the host-engine semantics
                         # (one analytic dispatch per nz client)
                         comm.log_s2c_many(rnd, per_client, C,
@@ -387,18 +431,23 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
                                           n_formula=int(nz.sum()))
                     else:
                         comm.log_s2c_many(rnd, per_client, int(nz.sum()))
-                    stacked = strategy.apply_dispatch_stacked(stacked,
-                                                              dispatch)
+                    with obs.span("round.apply", cat="phase",
+                                  round=rnd) as sp:
+                        stacked = strategy.apply_dispatch_stacked(stacked,
+                                                                  dispatch)
+                        sp.sync(stacked.extras)
 
             if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
-                if eval_dev:
-                    per_round = _eval_round_device(
-                        strategy, strategy.eval_theta_stacked(stacked),
-                        cache, tracker, rnd, t)
-                else:
-                    per_round = _eval_round(
-                        strategy, lambda c: strategy.client_view(stacked, c),
-                        bench, cache, tracker, rnd, t)
+                with obs.span("round.eval", cat="phase", round=rnd):
+                    if eval_dev:
+                        per_round = _eval_round_device(
+                            strategy, strategy.eval_theta_stacked(stacked),
+                            cache, tracker, rnd, t)
+                    else:
+                        per_round = _eval_round(
+                            strategy,
+                            lambda c: strategy.client_view(stacked, c),
+                            bench, cache, tracker, rnd, t)
                 eval_rounds.append(per_round)
                 if verbose:
                     print(f"  [{strategy.name}/stacked] round {rnd}: "
@@ -418,50 +467,54 @@ def run_simulation(strategy: Strategy, bench: FederatedReIDBenchmark,
         # EWC/MAS-style methods consolidate importance at task boundaries
         consolidate = ((rnd + 1) % rounds_per_task == 0) or rnd == rounds - 1
         uploads = {}
-        for c in range(C):
-            px, py, _, _ = protos[(c, t)]
-            if accepts_raw:
-                task = bench.task(c, t)
-                states[c], up = strategy.local_train(
-                    c, states[c], px, py, rnd,
-                    raw_images=task.train_x, g_params=g_params,
-                    consolidate=consolidate)
-            else:
-                states[c], up = strategy.local_train(c, states[c], px, py, rnd,
-                                                     consolidate=consolidate)
-            if up is not None:
-                formula = strategy.upload_bytes(up)
-                if strategy.upload_codec is not None:
-                    # the server integrates the DECODED (possibly lossy)
-                    # upload — exactly what crossed the wire
-                    up, measured = strategy.wire_upload(up, c)
-                    comm.log_c2s(rnd, formula, measured=measured)
+        with obs.span("round.local_train", cat="phase", round=rnd):
+            for c in range(C):
+                px, py, _, _ = protos[(c, t)]
+                if accepts_raw:
+                    task = bench.task(c, t)
+                    states[c], up = strategy.local_train(
+                        c, states[c], px, py, rnd,
+                        raw_images=task.train_x, g_params=g_params,
+                        consolidate=consolidate)
                 else:
-                    comm.log_c2s(rnd, formula)
-                uploads[c] = up
+                    states[c], up = strategy.local_train(
+                        c, states[c], px, py, rnd, consolidate=consolidate)
+                if up is not None:
+                    formula = strategy.upload_bytes(up)
+                    if strategy.upload_codec is not None:
+                        # the server integrates the DECODED (possibly
+                        # lossy) upload — exactly what crossed the wire
+                        up, measured = strategy.wire_upload(up, c)
+                        comm.log_c2s(rnd, formula, measured=measured)
+                    else:
+                        comm.log_c2s(rnd, formula)
+                    uploads[c] = up
 
         if strategy.uses_server and uploads:
             t0 = time.perf_counter()
-            dispatches = strategy.server_round(rnd, uploads)
+            with obs.span("round.server", cat="phase", round=rnd):
+                dispatches = strategy.server_round(rnd, uploads)
             server_s += time.perf_counter() - t0
-            for c, d in dispatches.items():
-                if d:
-                    formula = strategy.dispatch_bytes(d)
-                    if strategy.dispatch_codec is not None:
-                        d, measured = strategy.wire_dispatch(d, c)
-                        comm.log_s2c(rnd, formula, measured=measured)
-                    else:
-                        comm.log_s2c(rnd, formula)
-                    states[c] = strategy.apply_dispatch(states[c], d)
+            with obs.span("round.apply", cat="phase", round=rnd):
+                for c, d in dispatches.items():
+                    if d:
+                        formula = strategy.dispatch_bytes(d)
+                        if strategy.dispatch_codec is not None:
+                            d, measured = strategy.wire_dispatch(d, c)
+                            comm.log_s2c(rnd, formula, measured=measured)
+                        else:
+                            comm.log_s2c(rnd, formula)
+                        states[c] = strategy.apply_dispatch(states[c], d)
 
         if (rnd + 1) % eval_every == 0 or rnd == rounds - 1:
-            if eval_dev:
-                per_round = _eval_round_device(
-                    strategy, strategy.stack_eval_thetas(states), cache,
-                    tracker, rnd, t)
-            else:
-                per_round = _eval_round(strategy, lambda c: states[c], bench,
-                                        cache, tracker, rnd, t)
+            with obs.span("round.eval", cat="phase", round=rnd):
+                if eval_dev:
+                    per_round = _eval_round_device(
+                        strategy, strategy.stack_eval_thetas(states), cache,
+                        tracker, rnd, t)
+                else:
+                    per_round = _eval_round(strategy, lambda c: states[c],
+                                            bench, cache, tracker, rnd, t)
             eval_rounds.append(per_round)
             if verbose:
                 print(f"  [{strategy.name}] round {rnd}: "

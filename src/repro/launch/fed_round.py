@@ -18,6 +18,11 @@ federated round (paper Algorithm 1, lines 5-9) is a single SPMD program:
 Run a CPU demo:   PYTHONPATH=src python -m repro.launch.fed_round --demo
 Dry-run at scale: PYTHONPATH=src python -m repro.launch.fed_round \
                       --arch qwen3-1.7b
+
+``--trace out.jsonl`` records a repro.obs span per action (demo /
+stacked-demo / lower, device-synced wall time each); inspect with
+``python -m repro.obs.report out.jsonl`` or export a Perfetto trace via
+``--chrome``.
 """
 import os as _os
 import sys as _sys
@@ -40,6 +45,7 @@ from repro.common.compat import set_mesh, shard_map
 from repro.common.pytree import tree_flatten_concat, tree_unflatten_concat
 from repro.core.fedstil import sharded_fused_aggregate
 from repro.core.relevance import decayed_relevance
+from repro.obs import trace as obs
 
 
 def fed_round(theta_local, task_feature_local, hist_features_local, *,
@@ -225,15 +231,29 @@ def main():
     ap.add_argument("--stacked-demo", action="store_true")
     ap.add_argument("--arch", default=None)
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="write a repro.obs telemetry JSONL (one span per "
+                         "action); read it with python -m repro.obs.report")
     args = ap.parse_args()
-    if args.stacked_demo:
-        _stacked_demo()
-        if not (args.demo or args.arch):
-            return
-    if args.demo or not args.arch:
-        _demo()
-    if args.arch:
-        _lower(args.arch, args.multi_pod)
+    tracer = obs.Tracer(path=args.trace) if args.trace else obs.NullTracer()
+    try:
+        with obs.active(tracer):
+            if args.stacked_demo:
+                with obs.span("fed_round.stacked_demo", cat="phase"):
+                    _stacked_demo()
+                if not (args.demo or args.arch):
+                    return
+            if args.demo or not args.arch:
+                with obs.span("fed_round.demo", cat="phase"):
+                    _demo()
+            if args.arch:
+                with obs.span("fed_round.lower", cat="phase", arch=args.arch):
+                    _lower(args.arch, args.multi_pod)
+    finally:
+        tracer.close()
+        if args.trace:
+            print(f"telemetry: {args.trace}  "
+                  f"(python -m repro.obs.report {args.trace})")
 
 
 if __name__ == "__main__":

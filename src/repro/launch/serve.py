@@ -8,6 +8,12 @@ mid-stream federated-round index update, and prints QPS / p50 / p99.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --clients 4 --gallery 8192 \
       --queries 512 --batch 64 --mode int8
+
+With ``--trace out.jsonl`` the run executes under a live ``repro.obs``
+tracer: serve.batch / serve.index_refresh spans, bucket-exact latency
+histograms and rolling QPS from a ``ServeStats`` wired into the batcher,
+and IVF probe metrics when ``--mode ivf``. Inspect the sink with
+``python -m repro.obs.report out.jsonl``.
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ import jax
 import numpy as np
 
 from repro.core import edge_model as EM
+from repro.obs import trace as obs
+from repro.obs.metrics import ServeStats
 from repro.serving import ContinuousBatcher, GalleryIndex, RetrievalEngine
 from repro.serving.batcher import run_closed_loop
 
@@ -34,10 +42,25 @@ def main():
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--mode", choices=("int8", "fp32"), default="int8")
+    ap.add_argument("--mode", choices=("int8", "fp32", "ivf"), default="int8")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="coarse buckets scored per query (ivf mode)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.jsonl",
+                    help="write a repro.obs telemetry JSONL (spans + serve "
+                         "stats); read it with python -m repro.obs.report")
     args = ap.parse_args()
 
+    tracer = obs.Tracer(path=args.trace) if args.trace else obs.NullTracer()
+    with obs.active(tracer):
+        _serve(args)
+    if args.trace:
+        tracer.close()
+        print(f"telemetry: {args.trace}  "
+              f"(python -m repro.obs.report {args.trace})")
+
+
+def _serve(args):
     cfg = EM.EdgeModelConfig()
     rng = np.random.default_rng(args.seed)
     C, G = args.clients, args.gallery
@@ -48,8 +71,10 @@ def main():
     theta = _stack_thetas(keys, cfg)
 
     t0 = time.perf_counter()
-    index = GalleryIndex(protos, ids, keep_fp32=(args.mode == "fp32"))
-    engine = RetrievalEngine(index, theta, k=args.k, mode=args.mode)
+    index = GalleryIndex(protos, ids, keep_fp32=(args.mode == "fp32"),
+                         nlist="auto" if args.mode == "ivf" else 0)
+    engine = RetrievalEngine(index, theta, k=args.k, mode=args.mode,
+                             nprobe=args.nprobe)
     print(f"index: C={C} G={G} mode={args.mode} "
           f"resident={index.resident_bytes(args.mode) / 1e6:.1f} MB "
           f"built in {time.perf_counter() - t0:.2f}s")
@@ -58,7 +83,8 @@ def main():
                rng.standard_normal(cfg.proto_dim).astype(np.float32), -1)
               for _ in range(args.queries)]
 
-    batcher = ContinuousBatcher(engine, batch=args.batch)
+    stats = ServeStats() if obs.is_active() else None
+    batcher = ContinuousBatcher(engine, batch=args.batch, stats=stats)
     # warmup launch (compile) before measuring
     batcher.submit(0, stream[0][1])
     batcher.drain()
@@ -78,6 +104,8 @@ def main():
               f"p50={r['p50_ms']:.2f}ms  p99={r['p99_ms']:.2f}ms")
     print(f"index update (new adaptive heads, no re-extraction): "
           f"{refresh_ms:.1f} ms")
+    if stats is not None:
+        obs.metric("serve.stats", stats.snapshot(), mode=args.mode)
 
 
 if __name__ == "__main__":

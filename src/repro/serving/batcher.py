@@ -32,6 +32,9 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.obs import trace as obs
+from repro.obs.metrics import ServeStats
+
 
 @dataclasses.dataclass
 class Ticket:
@@ -82,16 +85,24 @@ class ContinuousBatcher:
     client-index order, "drr" = deficit round robin with ``quantum``
     slots of credit per backlogged client per step, default
     budget // n_clients).
+
+    ``stats`` (an ``obs.ServeStats``) turns on runtime serving metrics:
+    every step records queue depth before admission, completed-ticket
+    latencies into the fixed-bucket histograms (exact p50/p99 from the
+    buckets), completions into the rolling QPS meter, and — under drr —
+    the per-client deficit snapshot. ``None`` (default) records nothing.
     """
 
     def __init__(self, engine, batch: int = 32, *, policy: str = "fifo",
                  step_budget: Optional[int] = None,
-                 quantum: Optional[int] = None):
+                 quantum: Optional[int] = None,
+                 stats: Optional[ServeStats] = None):
         if policy not in ("fifo", "drr"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.engine = engine
         self.batch = batch
         self.policy = policy
+        self.stats = stats
         C = engine.index.n_clients
         self.step_budget = (C * batch if step_budget is None
                             else min(step_budget, C * batch))
@@ -147,6 +158,7 @@ class ContinuousBatcher:
     def step(self) -> List[Ticket]:
         """Run one coalesced launch over the admitted pending queries.
         Returns the tickets completed by this launch (empty when idle)."""
+        depth = self.pending
         self._qp[:] = 0.0
         self._qmask[:] = 0.0
         grant = self._admit()
@@ -161,8 +173,11 @@ class ContinuousBatcher:
             taken.append(row)
         if not any(taken):
             return []
+        n_slots = sum(len(row) for row in taken)
         launch = time.perf_counter()
-        ids, dists = self.engine.query_batch(self._qp, self._qmask)
+        with obs.span("serve.batch", cat="serve", slots=n_slots):
+            # query_batch returns numpy: the readback IS the sync boundary
+            ids, dists = self.engine.query_batch(self._qp, self._qmask)
         done = time.perf_counter()
         out = []
         for c, row in enumerate(taken):
@@ -172,6 +187,11 @@ class ContinuousBatcher:
                 t.ids = ids[c, b]
                 t.dists = dists[c, b]
                 out.append(t)
+        if self.stats is not None:
+            self.stats.record_launch(
+                depth, self._deficit if self.policy == "drr" else None)
+            for t in out:
+                self.stats.record_ticket(t)
         return out
 
     def drain(self) -> List[Ticket]:

@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analysis.registry import register_program
+from repro.analysis.registry import register_program, register_runtime
 from repro.core import edge_model as EM
 from repro.kernels import ops
+from repro.obs import trace as obs
 from repro.serving.index import GalleryIndex, _l2n
 
 _PAD_DIST = 1e30
@@ -119,15 +120,23 @@ def _query_ivf_abstract():
     "serving.query_ivf",
     abstract_args=_query_ivf_abstract,
     oracle="repro.serving.engine.query_ivf_host", budget_bytes=64 << 20)
-@functools.partial(jax.jit, static_argnames=("k", "nprobe", "backend"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "nprobe", "backend", "with_metrics"))
 def query_ivf_program(theta, bn_mu, bn_sd, qp, qmask, cent, cn2, bq, pack,
-                      *, k: int, nprobe: int, backend: str = None):
+                      *, k: int, nprobe: int, backend: str = None,
+                      with_metrics: bool = False):
     """The approximate serving path: featurize -> nearest ``nprobe``
     coarse buckets (``batched_cluster_assign``) -> score only those
     buckets' int8 rows (``batched_ivf_shortlist``) -> top-k. Scores
     nprobe*bcap rows per query instead of G (~sqrt(G)-fold less GEMM at
     nlist ~ sqrt(G)); distances are the same |q|^2 + |g|^2 - 2 q.g as the
-    exact int8 path, so recall@k vs that path is the fidelity metric."""
+    exact int8 path, so recall@k vs that path is the fidelity metric.
+
+    ``with_metrics=True`` (the tracing specialization, registered as
+    ``serving.query_ivf_metrics``) additionally returns per-client
+    rows-scored counts and the probe-rank histogram of the final top-k —
+    computed inside this same launch (hit mass at the last probe ranks
+    means nprobe is too small for the workload)."""
     qf = _featurize(theta, bn_mu, bn_sd, qp)
     probe = ops.batched_cluster_assign(qf, cent, cn2, nprobe=nprobe,
                                        backend=backend)
@@ -137,7 +146,25 @@ def query_ivf_program(theta, bn_mu, bn_sd, qp, qmask, cent, cn2, bq, pack,
     negd, idx = jax.lax.top_k(-d, k)
     top = jnp.take_along_axis(ids, idx, axis=2)
     top = jnp.where(qmask[..., None] > 0, top, -1)
-    return top, -negd
+    if not with_metrics:
+        return top, -negd
+    from repro.obs.metrics import ivf_metrics
+    mets = ivf_metrics(ids, qmask, idx, bq.shape[2], nprobe)
+    return top, -negd, mets
+
+
+def _query_ivf_metrics_abstract():
+    args, kw = _query_ivf_abstract()
+    return args, {**kw, "with_metrics": True}
+
+
+register_runtime(
+    "serving.query_ivf_metrics",
+    functools.partial(query_ivf_program, with_metrics=True),
+    abstract_args=_query_ivf_metrics_abstract,
+    module="repro.serving.engine",
+    oracle="repro.serving.engine.query_ivf_host",
+    budget_bytes=64 << 20)
 
 
 def query_ivf_host(theta, bn_mu, bn_sd, qp, qmask, cent, cn2, bq, pack, *,
@@ -327,7 +354,10 @@ class RetrievalEngine:
     def update(self, theta_stacked):
         """A federated round landed: swap the head, rebuild the index."""
         self.theta = jax.tree_util.tree_map(jnp.asarray, theta_stacked)
-        self.index.refresh(self.theta)
+        with obs.span("serve.index_refresh", cat="serve",
+                      mode=self.mode) as sp:
+            self.index.refresh(self.theta)
+            sp.sync(self.index.gq)
         self._naive = None
 
     def extend(self, client: int, protos, ids):
@@ -348,10 +378,20 @@ class RetrievalEngine:
                 self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,
                 ix.gq, ix.gscale, ix.gn2, ix.gids, k=k, backend=self.backend)
         elif self.mode == "ivf":
-            ids, d = query_ivf_program(
-                self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,
-                ix.cent, ix.cn2, ix.bq, ix.pack, k=k, nprobe=self.nprobe,
-                backend=self.backend)
+            if obs.is_active():
+                # tracing specialization: same launch also returns probe
+                # hit-rates + rows-scored ("serving.query_ivf_metrics")
+                ids, d, mets = query_ivf_program(
+                    self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,
+                    ix.cent, ix.cn2, ix.bq, ix.pack, k=k,
+                    nprobe=self.nprobe, backend=self.backend,
+                    with_metrics=True)
+                obs.metric("serve.ivf", mets, nprobe=self.nprobe)
+            else:
+                ids, d = query_ivf_program(
+                    self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,
+                    ix.cent, ix.cn2, ix.bq, ix.pack, k=k,
+                    nprobe=self.nprobe, backend=self.backend)
         else:
             ids, d = query_fp32_program(
                 self.theta, ix.bn_mu, ix.bn_sd, qp, qmask,

@@ -203,6 +203,28 @@ def test_dead_module_detection(bad_repo):
     assert "testonly" in by_code["seed-module"]
 
 
+def test_dead_module_init_fanout_does_not_keep_alive(bad_repo):
+    """A scope package init re-exporting a submodule (the registry
+    pattern) must NOT count as registry reachability — only an import by
+    name does. Tests importing the init still reach it (full graph), so
+    the finding is seed-module, not dead-module."""
+    cfg = bad_repo / "src" / "repro" / "configs"
+    cfg.mkdir()
+    (cfg / "__init__.py").write_text(
+        "from repro.configs.fanout import X\n")
+    (cfg / "fanout.py").write_text("X = 1\n")
+    (bad_repo / "src" / "repro" / "uses_cfg.py").write_text(
+        "import repro.configs\n")
+    (bad_repo / "tests" / "test_cfg.py").write_text(
+        "import repro.configs\n")
+    spec = ProgramSpec(name="kernels.wired", fn=lambda x: x,
+                       abstract_args=lambda: ((), {}),
+                       module="repro.uses_cfg")
+    fs = conventions.lint_dead_modules(bad_repo, [spec])
+    assert any(f.code == "seed-module" and "fanout" in f.message
+               for f in fs)
+
+
 # ---------------------------------------------------------------------------
 # baseline mechanics
 # ---------------------------------------------------------------------------

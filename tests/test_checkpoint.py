@@ -1,0 +1,90 @@
+"""checkpoint/io.py: round-trip fidelity + loud failure on corrupt files."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import load_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "layers": [
+            {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+             "b": np.zeros(3, np.float32)},
+            {"w": np.ones((2, 3), np.float32),
+             "b": np.full(3, -1.0, np.float32)},
+        ],
+        "head": {"scale": np.float32(0.5),
+                 "ids": np.array([3, 1, 2], np.int32)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    if isinstance(a, dict):
+        assert isinstance(b, dict)
+        assert sorted(a) == sorted(b)
+        for k in a:
+            _assert_tree_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert isinstance(b, (list, tuple)) and len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_tree_equal(x, y)
+    else:
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_trip_values_and_structure(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, _tree(), metadata={"round": 7, "tag": "smoke"})
+    tree, meta = load_checkpoint(path)
+    _assert_tree_equal(_tree(), tree)
+    assert meta == {"round": 7, "tag": "smoke"}
+
+
+def test_round_trip_without_metadata_and_ext_autocomplete(tmp_path):
+    # save under "ckpt" (np.savez appends .npz), load under "ckpt" too
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, {"x": np.arange(4)})
+    tree, meta = load_checkpoint(path)
+    assert meta is None
+    np.testing.assert_array_equal(np.asarray(tree["x"]), np.arange(4))
+
+
+def test_missing_file_raises_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope.npz"))
+
+
+def test_corrupt_file_raises_value_error(tmp_path):
+    path = tmp_path / "bad.npz"
+    path.write_bytes(b"this is not a zip archive")
+    with pytest.raises(ValueError, match="corrupt or unreadable"):
+        load_checkpoint(str(path))
+
+
+def test_truncated_file_raises_value_error(tmp_path):
+    path = str(tmp_path / "trunc.npz")
+    save_checkpoint(path, _tree())
+    raw = open(path, "rb").read()
+    open(path, "wb").write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match=r"trunc\.npz"):
+        load_checkpoint(path)
+
+
+def test_corrupt_metadata_raises_value_error(tmp_path):
+    path = str(tmp_path / "meta.npz")
+    np.savez(path, __meta__=np.frombuffer(b"{not json", dtype=np.uint8),
+             x=np.zeros(2))
+    with pytest.raises(ValueError, match="metadata"):
+        load_checkpoint(path)
+
+
+def test_metadata_survives_non_ascii(tmp_path):
+    path = str(tmp_path / "uni.npz")
+    meta = {"note": "réid — ♥", "k": [1, 2]}
+    save_checkpoint(path, {"x": np.zeros(1)}, metadata=meta)
+    _, got = load_checkpoint(path)
+    assert got == meta
+    assert json.dumps(got)          # still JSON-serializable
